@@ -1,0 +1,44 @@
+"""Scenario: full paper-style design-space exploration on one benchmark.
+
+Reproduces the Fig-4 flow for a chosen MachSuite benchmark: sweep
+banking factors x AMM designs x unroll, print the (time, area, power)
+points, both Pareto fronts, the design-space expansion, and the Fig-5
+performance ratio.
+
+Run:  PYTHONPATH=src python examples/dse_machsuite.py [bench] [--full]
+"""
+import sys
+
+from repro.core.bench import BENCHMARKS
+from repro.core.dse import (DEFAULT_DESIGNS, design_space_expansion,
+                            pareto_front, performance_ratio, sweep)
+from repro.core.locality import trace_locality
+
+bench = sys.argv[1] if len(sys.argv) > 1 and not sys.argv[1].startswith("-") \
+    else "gemm_ncubed"
+full = "--full" in sys.argv
+mod = BENCHMARKS[bench]
+params = mod.Params() if full else mod.TINY
+
+tr = mod.gen_trace(params)
+addrs, aids = tr.mem_addrs_and_arrays()
+print(f"benchmark={bench}  nodes={tr.n_nodes}  mem_ops={tr.n_mem}  "
+      f"L_spatial={trace_locality(addrs, aids):.3f}\n")
+
+pts = sweep(tr, DEFAULT_DESIGNS, unrolls=(1, 2, 4, 8))
+print(f"{'design':16s} {'unroll':6s} {'cycles':>8s} {'time_us':>9s} "
+      f"{'area_mm2':>9s} {'power_mW':>9s} {'stalls':>8s}")
+for p in sorted(pts, key=lambda p: p.time_us):
+    print(f"{p.design:16s} {p.unroll:<6d} {p.cycles:8d} {p.time_us:9.2f} "
+          f"{p.area_mm2:9.4f} {p.power_mw:9.1f} {p.bank_conflict_stalls:8d}")
+
+banking = [p for p in pts if not p.is_amm]
+amm = [p for p in pts if p.is_amm]
+print("\nbanking Pareto (time, area):",
+      [(round(p.time_us, 2), round(p.area_mm2, 4)) for p in pareto_front(banking)])
+print("AMM Pareto     (time, area):",
+      [(round(p.time_us, 2), round(p.area_mm2, 4)) for p in pareto_front(amm)])
+print(f"\ndesign-space expansion (fastest banked / fastest AMM): "
+      f"{design_space_expansion(banking, amm):.2f}x")
+print(f"performance ratio (geomean banked-area / AMM-area at iso-time): "
+      f"{performance_ratio(pts):.2f}  (>1 means AMM is the better design)")

@@ -1,0 +1,18 @@
+"""Scenario: batched serving with the AMM memory planner.
+
+Runs the planner (locality -> AMM-vs-banked decision per memory stream),
+prefills a batch of prompts and decodes continuations, printing
+tokens/s.  Try --arch minicpm3-4b to see the MLA latent cache, or
+--arch mamba2-130m for the attention-free path.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-1.7b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+argv = sys.argv[1:] if len(sys.argv) > 1 else []
+if "--arch" not in argv:
+    argv += ["--arch", "qwen3-1.7b"]
+main(argv + ["--preset", "tiny", "--batch", "4",
+             "--prompt-len", "64", "--gen", "32"])

@@ -1,0 +1,155 @@
+"""Checkpointing: npy-per-leaf with a JSON manifest, atomic renames,
+optional async writes, keep-last-k GC, and reshard-on-restore.
+
+Restore never assumes the saving mesh: leaves come back as host numpy
+arrays and are ``device_put`` with whatever sharding the *current* mesh
+dictates — that is what makes elastic re-scaling (runtime/elastic.py)
+work after losing a pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    named = []
+    for path, leaf in leaves:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "name", getattr(k, "idx", k))))
+            for k in path)
+        named.append((name, leaf))
+    return named, treedef
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep_last: int = 3
+    async_save: bool = False
+
+    def __post_init__(self) -> None:
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.directory):
+            if d.startswith("ckpt_") and not d.endswith(".tmp"):
+                out.append(int(d.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool | None = None) -> str:
+        """Atomic save; returns the checkpoint path."""
+        named, _ = _flatten(tree)
+        # np.load round-trips ml_dtypes (bfloat16 etc.) as raw void — we
+        # store such leaves as a uint view and record the logical dtype.
+        host = []
+        for n, x in named:
+            arr = np.asarray(jax.device_get(x))
+            logical = str(arr.dtype)
+            if arr.dtype.kind not in "fiub c":
+                arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+            host.append((n, arr, logical))
+
+        def write() -> None:
+            final = self._step_dir(step)
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest = {"step": step, "leaves": []}
+            for name, arr, logical in host:
+                fname = hashlib.sha1(name.encode()).hexdigest()[:16] + ".npy"
+                np.save(os.path.join(tmp, fname), arr)
+                manifest["leaves"].append({
+                    "name": name, "file": fname,
+                    "shape": list(arr.shape), "dtype": logical,
+                })
+            with open(os.path.join(tmp, _MANIFEST), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking is None:
+            blocking = not self.async_save
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        return self._step_dir(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def restore(self, template: Any, step: int | None = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``template``.  ``shardings``
+        (optional pytree of NamedSharding) re-shards onto the current
+        mesh — the saving mesh is irrelevant."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, _MANIFEST)) as f:
+            manifest = json.load(f)
+        by_name = {leaf["name"]: leaf for leaf in manifest["leaves"]}
+
+        named, treedef = _flatten(template)
+        shard_named = None
+        if shardings is not None:
+            shard_named, _ = _flatten(shardings)
+        out = []
+        import ml_dtypes  # registers bfloat16 & friends with numpy
+
+        for i, (name, tmpl) in enumerate(named):
+            if name not in by_name:
+                raise KeyError(f"checkpoint {d} missing leaf {name!r}")
+            leaf = by_name[name]
+            arr = np.load(os.path.join(d, leaf["file"]))
+            want = np.dtype(leaf["dtype"])
+            if arr.dtype != want:
+                arr = arr.view(want)       # undo the uint storage view
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"leaf {name}: saved {arr.shape} != template {tmpl.shape}")
+            if shard_named is not None:
+                out.append(jax.device_put(arr.astype(tmpl.dtype),
+                                          shard_named[i][1]))
+            else:
+                out.append(jax.numpy.asarray(arr.astype(tmpl.dtype)))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,17 @@
+"""Core library: the paper's contribution.
+
+- ``repro.core.amm``      — algorithmic multi-port memory designs
+- ``repro.core.sim``      — dynamic trace / DDG / port-constrained scheduler
+- ``repro.core.cost``     — CACTI-like SRAM + synthesized-logic cost models
+- ``repro.core.bench``    — MachSuite-like benchmark traces
+- ``repro.core.locality`` — Weinberg spatial-locality metric
+- ``repro.core.dse``      — design-space sweep, Pareto, performance ratio
+"""
+from repro.core.amm import AMM_KINDS, AMMSpec, make_amm
+from repro.core.locality import (spatial_locality_jax, spatial_locality_np,
+                                 trace_locality)
+
+__all__ = [
+    "AMMSpec", "AMM_KINDS", "make_amm",
+    "spatial_locality_np", "spatial_locality_jax", "trace_locality",
+]

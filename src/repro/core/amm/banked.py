@@ -1,0 +1,85 @@
+"""Conventional baselines: ideal multiport RAM, array-partitioned banking,
+and multi-pumping (paper section I).
+
+Banking has *identical functional semantics* to an ideal RAM — what
+differs is timing: concurrent accesses that map to the same bank
+serialize.  ``conflict_cycles`` is the timing model the scheduler uses.
+Multi-pumping doubles the per-cycle port count but halves the maximum
+external frequency (``AMMSpec.frequency_factor``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amm.spec import AMMSpec
+
+U32 = jnp.uint32
+Tree = dict[str, jax.Array]
+
+
+def ideal_init(spec: AMMSpec, values: jax.Array) -> Tree:
+    return {"mem": values.astype(U32)}
+
+
+def ideal_read(state: Tree, addr: jax.Array) -> jax.Array:
+    return state["mem"][addr]
+
+
+@jax.jit
+def ideal_step(state, read_addrs, write_addrs, write_vals, write_mask):
+    vals = state["mem"][read_addrs]
+    mem = state["mem"]
+    for p in range(write_addrs.shape[0]):  # later ports win, like LVT order
+        mem = jnp.where(
+            write_mask[p],
+            mem.at[write_addrs[p]].set(write_vals[p].astype(U32)),
+            mem,
+        )
+    return {"mem": mem}, vals
+
+
+def ideal_peek(state: Tree) -> jax.Array:
+    return state["mem"]
+
+
+# ----------------------------------------------------------------------
+# Banking timing model
+# ----------------------------------------------------------------------
+def bank_of(addrs: jax.Array, n_banks: int) -> jax.Array:
+    """Cyclic interleave: word address modulo bank count (paper IV-A:
+    'arrays which have single-stride access can be partitioned cyclically')."""
+    return jnp.mod(addrs, n_banks)
+
+
+def conflict_cycles(
+    addrs: jax.Array,
+    mask: jax.Array,
+    n_banks: int,
+    ports_per_bank: int = 1,
+) -> jax.Array:
+    """Cycles needed to issue one *group* of parallel accesses.
+
+    addrs: [W] word addresses wanting to issue in the same cycle.
+    mask:  [W] validity.
+    Returns max over banks of ceil(hits / ports_per_bank); 0 if empty.
+    """
+    banks = bank_of(addrs, n_banks)
+    hits = jnp.sum(
+        jnp.where(mask[:, None], jax.nn.one_hot(banks, n_banks, dtype=jnp.int32), 0),
+        axis=0,
+    )
+    worst = jnp.max(hits)
+    return jnp.where(worst > 0, -(-worst // ports_per_bank), 0)
+
+
+def conflict_cycles_grouped(
+    addr_groups: jax.Array,
+    mask_groups: jax.Array,
+    n_banks: int,
+    ports_per_bank: int = 1,
+) -> jax.Array:
+    """Vectorized over [G, W] groups -> [G] cycles per group."""
+    return jax.vmap(
+        lambda a, m: conflict_cycles(a, m, n_banks, ports_per_bank)
+    )(addr_groups, mask_groups)

@@ -1,0 +1,112 @@
+"""Table-based AMM designs (paper section II-B): LVT and remap table.
+
+* LVT (live value table): one full-depth bank per write port (each
+  conceptually replicated ``n_read`` times in hardware for read scaling —
+  functionally the replicas are identical so we store one copy).  The
+  LVT records, per address, which write-port bank holds the newest value.
+
+* Remap table: ``n_write + 1`` full-depth banks.  Each incoming write is
+  steered to a bank not used by another write this cycle (always possible
+  with one spare bank); the remap table tracks the live bank per address.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amm.spec import AMMSpec
+
+U32 = jnp.uint32
+Tree = dict[str, jax.Array]
+
+
+# ----------------------------------------------------------------------
+# LVT
+# ----------------------------------------------------------------------
+def lvt_init(spec: AMMSpec, values: jax.Array) -> Tree:
+    banks = jnp.tile(values.astype(U32)[None, :], (spec.n_write, 1))
+    table = jnp.zeros((spec.depth,), jnp.int32)
+    return {"banks": banks, "lvt": table}
+
+
+def lvt_read(state: Tree, addr: jax.Array) -> jax.Array:
+    return state["banks"][state["lvt"][addr], addr]
+
+
+def lvt_write_port(state: Tree, port: int, addr: jax.Array,
+                   value: jax.Array, mask: jax.Array) -> Tree:
+    banks = jax.lax.cond(
+        mask,
+        lambda s: s["banks"].at[port, addr].set(value.astype(U32)),
+        lambda s: s["banks"],
+        state,
+    )
+    lvt = jax.lax.cond(
+        mask,
+        lambda s: s["lvt"].at[addr].set(jnp.int32(port)),
+        lambda s: s["lvt"],
+        state,
+    )
+    return {"banks": banks, "lvt": lvt}
+
+
+@jax.jit
+def lvt_step(state, read_addrs, write_addrs, write_vals, write_mask):
+    vals = jax.vmap(lambda a: lvt_read(state, a))(read_addrs)
+    n_write = state["banks"].shape[0]
+    for p in range(n_write):  # ports resolve in order; later port wins
+        state = lvt_write_port(state, p, write_addrs[p], write_vals[p],
+                               write_mask[p])
+    return state, vals
+
+
+def lvt_peek(state: Tree) -> jax.Array:
+    depth = state["lvt"].shape[0]
+    idx = jnp.arange(depth)
+    return state["banks"][state["lvt"][idx], idx]
+
+
+# ----------------------------------------------------------------------
+# Remap table
+# ----------------------------------------------------------------------
+def remap_init(spec: AMMSpec, values: jax.Array) -> Tree:
+    n_banks = spec.n_write + 1
+    banks = jnp.tile(values.astype(U32)[None, :], (n_banks, 1))
+    table = jnp.zeros((spec.depth,), jnp.int32)
+    return {"banks": banks, "map": table}
+
+
+def remap_read(state: Tree, addr: jax.Array) -> jax.Array:
+    return state["banks"][state["map"][addr], addr]
+
+
+@jax.jit
+def remap_step(state, read_addrs, write_addrs, write_vals, write_mask):
+    vals = jax.vmap(lambda a: remap_read(state, a))(read_addrs)
+    n_banks = state["banks"].shape[0]
+    used = jnp.zeros((n_banks,), bool)
+    banks, table = state["banks"], state["map"]
+    for p in range(write_addrs.shape[0]):
+        a, v, m = write_addrs[p], write_vals[p], write_mask[p]
+        pref = table[a]
+        # first bank, scanning from the preferred one, not used this cycle
+        order = (pref + jnp.arange(n_banks)) % n_banks
+        free = jnp.logical_not(used[order])
+        d = jnp.argmax(free)  # first free slot in rotated order
+        bank = order[d]
+        banks = jax.lax.cond(
+            m, lambda b: b.at[bank, a].set(v.astype(U32)), lambda b: b, banks
+        )
+        table = jax.lax.cond(
+            m, lambda t: t.at[a].set(bank), lambda t: t, table
+        )
+        used = jax.lax.cond(
+            m, lambda u: u.at[bank].set(True), lambda u: u, used
+        )
+    return {"banks": banks, "map": table}, vals
+
+
+def remap_peek(state: Tree) -> jax.Array:
+    depth = state["map"].shape[0]
+    idx = jnp.arange(depth)
+    return state["banks"][state["map"][idx], idx]

@@ -1,0 +1,390 @@
+"""Non-table XOR-based AMM designs (paper section II-A).
+
+Three functional models, each a pure-JAX state machine over ``uint32``
+word payloads (wider/narrower logical words are packed by the caller):
+
+* ``h_ntx_rd``  — H-NTX-Rd: hierarchical read scaling.  Bank0 stores the
+  low half, Bank1 the high half, Ref stores ``Bank0 ^ Bank1``.  A second
+  read hitting the same bank is served as ``other_bank[o] ^ ref[o]``.
+  Scaling to ``2**k`` read ports recurses: every bank (including Ref) is
+  itself an H-NTX-Rd structure -> a ternary tree with ``3**k`` leaves.
+
+* ``b_ntx_wr``  — B-NTX-Wr: banks store *encoded* data ``D ^ Ref``.
+  Two conflicting writes are absorbed by re-pointing ``Ref`` (the paper's
+  RMW sequence: ``T = S1[j]^Ref[j]; Ref[j] = W1 ^ S0[j]; S1[j] = Ref[j]^T``).
+
+* ``hb_ntx``    — HB-NTX-RdWr (paper Fig 2): B-NTX-Wr at the top level
+  where S0 / S1 / Ref are each H-NTX-Rd trees, yielding nR x 2W.
+
+The models expose ``init / read / read_parity / write* / step / peek``.
+``read`` decodes through the direct path; ``read_parity`` decodes through
+the XOR-reconstruction path that hardware uses under a bank conflict.
+The central correctness property (tested with hypothesis) is that after
+*any* op sequence both paths agree with a plain-RAM oracle.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amm.spec import AMMSpec
+
+Tree = dict[str, Any]
+U32 = jnp.uint32
+
+
+# ======================================================================
+# H-NTX-Rd : ternary XOR parity tree
+# ======================================================================
+def h_init(values: jax.Array, levels: int) -> Tree:
+    values = values.astype(U32)
+    if levels == 0:
+        return {"leaf": values}
+    half = values.shape[0] // 2
+    lo, hi = values[:half], values[half:]
+    return {
+        "b0": h_init(lo, levels - 1),
+        "b1": h_init(hi, levels - 1),
+        "ref": h_init(lo ^ hi, levels - 1),
+    }
+
+
+def _h_depth(node: Tree) -> int:
+    if "leaf" in node:
+        return node["leaf"].shape[0]
+    return 2 * _h_depth(node["b0"])
+
+
+def h_read(node: Tree, addr: jax.Array) -> jax.Array:
+    """Direct-path read of logical address ``addr``."""
+    if "leaf" in node:
+        return node["leaf"][addr]
+    half = _h_depth(node["b0"])
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    return jnp.where(hi, h_read(node["b1"], off), h_read(node["b0"], off))
+
+
+def h_read_parity(node: Tree, addr: jax.Array) -> jax.Array:
+    """Conflict-path read: reconstruct from the *other* bank and Ref,
+    recursing through the parity path at every level of the tree."""
+    if "leaf" in node:
+        return node["leaf"][addr]
+    half = _h_depth(node["b0"])
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    rec0 = h_read_parity(node["b1"], off) ^ h_read_parity(node["ref"], off)
+    rec1 = h_read_parity(node["b0"], off) ^ h_read_parity(node["ref"], off)
+    return jnp.where(hi, rec1, rec0)
+
+
+def h_write(node: Tree, addr: jax.Array, value: jax.Array) -> Tree:
+    """Single-port write maintaining the parity invariant at every level."""
+    if "leaf" in node:
+        return {"leaf": node["leaf"].at[addr].set(value.astype(U32))}
+    half = _h_depth(node["b0"])
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+
+    def wr_hi(nd: Tree) -> Tree:
+        other = h_read(nd["b0"], off)
+        return {
+            "b0": nd["b0"],
+            "b1": h_write(nd["b1"], off, value),
+            "ref": h_write(nd["ref"], off, value ^ other),
+        }
+
+    def wr_lo(nd: Tree) -> Tree:
+        other = h_read(nd["b1"], off)
+        return {
+            "b0": h_write(nd["b0"], off, value),
+            "b1": nd["b1"],
+            "ref": h_write(nd["ref"], off, value ^ other),
+        }
+
+    return jax.lax.cond(hi, wr_hi, wr_lo, node)
+
+
+def h_peek(node: Tree) -> jax.Array:
+    if "leaf" in node:
+        return node["leaf"]
+    return jnp.concatenate([h_peek(node["b0"]), h_peek(node["b1"])])
+
+
+# ======================================================================
+# B-NTX-Wr : encoded banks + reference, 2 conflict-free writes
+# ======================================================================
+def b_init(values: jax.Array) -> Tree:
+    values = values.astype(U32)
+    half = values.shape[0] // 2
+    ref = jnp.zeros((half,), U32)
+    # Banks store encoded data D ^ Ref; with Ref == 0 that's D itself.
+    return {"s0": values[:half], "s1": values[half:], "ref": ref}
+
+
+def _b_half(state: Tree) -> int:
+    return state["ref"].shape[0]
+
+
+def b_read(state: Tree, addr: jax.Array) -> jax.Array:
+    half = _b_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    enc = jnp.where(hi, state["s1"][off], state["s0"][off])
+    return enc ^ state["ref"][off]
+
+
+def b_write1(state: Tree, addr: jax.Array, value: jax.Array) -> Tree:
+    """Non-conflict single write: S_h[o] = W ^ Ref[o]."""
+    half = _b_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    enc = value.astype(U32) ^ state["ref"][off]
+
+    def hi_fn(st: Tree) -> Tree:
+        return {**st, "s1": st["s1"].at[off].set(enc)}
+
+    def lo_fn(st: Tree) -> Tree:
+        return {**st, "s0": st["s0"].at[off].set(enc)}
+
+    return jax.lax.cond(hi, hi_fn, lo_fn, state)
+
+
+def b_write_conflict(state: Tree, addr: jax.Array, value: jax.Array) -> Tree:
+    """Second conflicting write into the same bank as the first one.
+
+    Paper sequence (both writes landed in bank h):
+        T      = S_other[j] ^ Ref[j]        # save the other half's value
+        Ref[j] = W1 ^ S_h[j]                # re-point Ref so S_h decodes to W1
+        S_other[j] = Ref[j] ^ T             # re-encode the other half
+    """
+    half = _b_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    value = value.astype(U32)
+
+    def hi_fn(st: Tree) -> Tree:  # conflict in bank 1 -> other is s0
+        t = st["s0"][off] ^ st["ref"][off]
+        new_ref = value ^ st["s1"][off]
+        return {
+            "s0": st["s0"].at[off].set(new_ref ^ t),
+            "s1": st["s1"],
+            "ref": st["ref"].at[off].set(new_ref),
+        }
+
+    def lo_fn(st: Tree) -> Tree:  # conflict in bank 0 -> other is s1
+        t = st["s1"][off] ^ st["ref"][off]
+        new_ref = value ^ st["s0"][off]
+        return {
+            "s0": st["s0"],
+            "s1": st["s1"].at[off].set(new_ref ^ t),
+            "ref": st["ref"].at[off].set(new_ref),
+        }
+
+    return jax.lax.cond(hi, hi_fn, lo_fn, state)
+
+
+def b_write2(
+    state: Tree,
+    a0: jax.Array, v0: jax.Array, m0: jax.Array,
+    a1: jax.Array, v1: jax.Array, m1: jax.Array,
+) -> Tree:
+    """Dual-port write with the paper's conflict handling."""
+    half = _b_half(state)
+    state = jax.lax.cond(m0, lambda s: b_write1(s, a0, v0), lambda s: s, state)
+    same_bank = jnp.logical_and(m0, (a0 >= half) == (a1 >= half))
+
+    def do_w1(st: Tree) -> Tree:
+        return jax.lax.cond(
+            same_bank,
+            lambda s: b_write_conflict(s, a1, v1),
+            lambda s: b_write1(s, a1, v1),
+            st,
+        )
+
+    return jax.lax.cond(m1, do_w1, lambda s: s, state)
+
+
+def b_peek(state: Tree) -> jax.Array:
+    return jnp.concatenate(
+        [state["s0"] ^ state["ref"], state["s1"] ^ state["ref"]]
+    )
+
+
+# ======================================================================
+# HB-NTX-RdWr : B at the top, every bank an H read tree (paper Fig 2)
+# ======================================================================
+def hb_init(values: jax.Array, read_levels: int) -> Tree:
+    values = values.astype(U32)
+    half = values.shape[0] // 2
+    zeros = jnp.zeros((half,), U32)
+    return {
+        "s0": h_init(values[:half], read_levels),
+        "s1": h_init(values[half:], read_levels),
+        "ref": h_init(zeros, read_levels),
+    }
+
+
+def _hb_half(state: Tree) -> int:
+    return _h_depth(state["ref"])
+
+
+def hb_read(state: Tree, addr: jax.Array) -> jax.Array:
+    half = _hb_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    enc = jnp.where(hi, h_read(state["s1"], off), h_read(state["s0"], off))
+    return enc ^ h_read(state["ref"], off)
+
+
+def hb_read_parity(state: Tree, addr: jax.Array) -> jax.Array:
+    half = _hb_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    enc = jnp.where(
+        hi, h_read_parity(state["s1"], off), h_read_parity(state["s0"], off)
+    )
+    return enc ^ h_read_parity(state["ref"], off)
+
+
+def hb_write1(state: Tree, addr: jax.Array, value: jax.Array) -> Tree:
+    half = _hb_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    enc = value.astype(U32) ^ h_read(state["ref"], off)
+
+    def hi_fn(st: Tree) -> Tree:
+        return {**st, "s1": h_write(st["s1"], off, enc)}
+
+    def lo_fn(st: Tree) -> Tree:
+        return {**st, "s0": h_write(st["s0"], off, enc)}
+
+    return jax.lax.cond(hi, hi_fn, lo_fn, state)
+
+
+def hb_write_conflict(state: Tree, addr: jax.Array, value: jax.Array) -> Tree:
+    half = _hb_half(state)
+    hi = addr >= half
+    off = addr - jnp.where(hi, half, 0)
+    value = value.astype(U32)
+
+    def hi_fn(st: Tree) -> Tree:
+        t = h_read(st["s0"], off) ^ h_read(st["ref"], off)
+        new_ref = value ^ h_read(st["s1"], off)
+        return {
+            "s0": h_write(st["s0"], off, new_ref ^ t),
+            "s1": st["s1"],
+            "ref": h_write(st["ref"], off, new_ref),
+        }
+
+    def lo_fn(st: Tree) -> Tree:
+        t = h_read(st["s1"], off) ^ h_read(st["ref"], off)
+        new_ref = value ^ h_read(st["s0"], off)
+        return {
+            "s0": st["s0"],
+            "s1": h_write(st["s1"], off, new_ref ^ t),
+            "ref": h_write(st["ref"], off, new_ref),
+        }
+
+    return jax.lax.cond(hi, hi_fn, lo_fn, state)
+
+
+def hb_write2(
+    state: Tree,
+    a0: jax.Array, v0: jax.Array, m0: jax.Array,
+    a1: jax.Array, v1: jax.Array, m1: jax.Array,
+) -> Tree:
+    half = _hb_half(state)
+    state = jax.lax.cond(m0, lambda s: hb_write1(s, a0, v0), lambda s: s, state)
+    same_bank = jnp.logical_and(m0, (a0 >= half) == (a1 >= half))
+
+    def do_w1(st: Tree) -> Tree:
+        return jax.lax.cond(
+            same_bank,
+            lambda s: hb_write_conflict(s, a1, v1),
+            lambda s: hb_write1(s, a1, v1),
+            st,
+        )
+
+    return jax.lax.cond(m1, do_w1, lambda s: s, state)
+
+
+def hb_peek(state: Tree) -> jax.Array:
+    ref = h_peek(state["ref"])
+    return jnp.concatenate(
+        [h_peek(state["s0"]) ^ ref, h_peek(state["s1"]) ^ ref]
+    )
+
+
+# ======================================================================
+# Uniform step() wrappers (read-before-write semantics)
+# ======================================================================
+def _gather_reads(read_fn, state, read_addrs):
+    return jax.vmap(lambda a: read_fn(state, a))(read_addrs)
+
+
+@partial(jax.jit, static_argnames=("levels",))
+def h_step(state, read_addrs, write_addrs, write_vals, write_mask, levels=0):
+    vals = _gather_reads(lambda s, a: h_read(s, a), state, read_addrs)
+    # single write port
+    state = jax.lax.cond(
+        write_mask[0],
+        lambda s: h_write(s, write_addrs[0], write_vals[0]),
+        lambda s: s,
+        state,
+    )
+    return state, vals
+
+
+@jax.jit
+def b_step(state, read_addrs, write_addrs, write_vals, write_mask):
+    vals = _gather_reads(b_read, state, read_addrs)
+    state = b_write2(
+        state,
+        write_addrs[0], write_vals[0], write_mask[0],
+        write_addrs[1], write_vals[1], write_mask[1],
+    )
+    return state, vals
+
+
+@jax.jit
+def hb_step(state, read_addrs, write_addrs, write_vals, write_mask):
+    vals = _gather_reads(hb_read, state, read_addrs)
+    state = hb_write2(
+        state,
+        write_addrs[0], write_vals[0], write_mask[0],
+        write_addrs[1], write_vals[1], write_mask[1],
+    )
+    return state, vals
+
+
+def make_ntx(spec: AMMSpec, values: jax.Array):
+    """Factory: returns (state, fns dict) for the requested NTX design."""
+    if spec.kind == "h_ntx_rd":
+        state = h_init(values, spec.read_tree_levels)
+        return state, {
+            "read": h_read,
+            "read_parity": h_read_parity,
+            "step": h_step,
+            "peek": h_peek,
+        }
+    if spec.kind == "b_ntx_wr":
+        state = b_init(values)
+        return state, {
+            "read": b_read,
+            "read_parity": b_read,  # B has no read-scaling parity path
+            "step": b_step,
+            "peek": b_peek,
+        }
+    if spec.kind == "hb_ntx":
+        state = hb_init(values, spec.read_tree_levels)
+        return state, {
+            "read": hb_read,
+            "read_parity": hb_read_parity,
+            "step": hb_step,
+            "peek": hb_peek,
+        }
+    raise ValueError(f"not an NTX design: {spec.kind}")

@@ -1,0 +1,25 @@
+"""MachSuite-like benchmark registry (paper III-B / IV-A).
+
+Each module provides: ``Params`` (+ ``TINY``), ``gen_trace(params)`` and
+a runnable JAX implementation.  The four discussion benchmarks of the
+paper (Fig 4) are fft_strided, gemm_ncubed, kmp, md_knn; sort_merge,
+stencil2d and aes widen the locality spread for the Fig-5 analysis.
+"""
+from __future__ import annotations
+
+from repro.core.bench import (aes, fft_strided, gemm_ncubed, kmp, md_knn,
+                              sort_merge, stencil2d)
+
+BENCHMARKS = {
+    "fft_strided": fft_strided,
+    "gemm_ncubed": gemm_ncubed,
+    "kmp": kmp,
+    "md_knn": md_knn,
+    "sort_merge": sort_merge,
+    "stencil2d": stencil2d,
+    "aes": aes,
+}
+
+PAPER_FIG4 = ("fft_strided", "gemm_ncubed", "kmp", "md_knn")
+
+__all__ = ["BENCHMARKS", "PAPER_FIG4"]

@@ -1,0 +1,42 @@
+"""Performance Ratio (paper IV-C):
+
+    PerfRatio = ((a_1 * ... * a_n) / (b_1 * ... * b_n))^(1/n)
+
+where a_i is the area of the banking structure and b_i the area of the
+AMM design *at similar execution times* — the geometric mean of the
+area advantage over the common reachable time range.  >1 means AMM needs
+less area than banking for the same speed (higher is better, Fig 5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.dse.pareto import cost_at_time, pareto_front
+from repro.core.dse.sweep import DSEPoint
+
+
+def performance_ratio(points: Sequence[DSEPoint], n_samples: int = 12) -> float:
+    banking = [p for p in points if not p.is_amm]
+    amm = [p for p in points if p.is_amm]
+    if not banking or not amm:
+        return float("nan")
+    fb = pareto_front(banking)
+    fa = pareto_front(amm)
+    # common reachable range: both families must reach t
+    t_lo = max(min(p.time_us for p in fb), min(p.time_us for p in fa))
+    t_hi = max(max(p.time_us for p in fb), max(p.time_us for p in fa))
+    if t_hi <= t_lo:
+        t_hi = t_lo * 1.01
+    ts = np.geomspace(t_lo, t_hi, n_samples)
+    logs = []
+    for t in ts:
+        a = cost_at_time(fb, float(t))
+        b = cost_at_time(fa, float(t))
+        if math.isfinite(a) and math.isfinite(b) and a > 0 and b > 0:
+            logs.append(math.log(a / b))
+    if not logs:
+        return float("nan")
+    return math.exp(sum(logs) / len(logs))

@@ -1,0 +1,178 @@
+"""Design-space sweep (paper IV-A): 'different compositions are possible
+by loop-unrolling, array-partitioning, changing word-size and number of
+read and write ports. We use a sweep of such compositions, in the
+implemented Mem-Aladdin Framework.'
+
+One :class:`DSEPoint` = one accelerator composition: a memory design
+applied per array (banked partitioning or an AMM port config) x a loop
+unroll factor (scaling functional units).  Cycles come from the
+port-constrained scheduler; time/area/power from the cost models.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.cost import (FU_AREA_MM2, FU_LEAK_MW, FU_POWER_MW,
+                             memory_cost)
+from repro.core.sim import trace as T
+from repro.core.sim.scheduler import ScheduleConfig, schedule
+
+# base FU mix at unroll=1 (Aladdin constructs multi-issue ALUs by unrolling)
+_BASE_FU = {"fadd": 1, "fmul": 1, "fdiv": 1, "iadd": 2, "imul": 1,
+            "icmp": 2, "logic": 4}
+_MIN_CYCLE_NS = 0.9  # FU critical path floor at 45nm
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    """A memory design template, instantiated per array."""
+    kind: str
+    n_read: int = 1
+    n_write: int = 1
+    n_banks: int = 1
+
+    @property
+    def label(self) -> str:
+        if self.kind == "banked":
+            return f"banked{self.n_banks}"
+        return f"{self.kind}-{self.n_read}R{self.n_write}W"
+
+    @property
+    def is_amm(self) -> bool:
+        return self.kind in ("h_ntx_rd", "b_ntx_wr", "hb_ntx", "lvt", "remap")
+
+
+DEFAULT_DESIGNS: tuple[DesignPoint, ...] = (
+    DesignPoint("banked", n_banks=1),
+    DesignPoint("banked", n_banks=2),
+    DesignPoint("banked", n_banks=4),
+    DesignPoint("banked", n_banks=8),
+    DesignPoint("banked", n_banks=16),
+    DesignPoint("banked", n_banks=32),
+    DesignPoint("multipump", 2, 2),
+    DesignPoint("h_ntx_rd", 2, 1),
+    DesignPoint("h_ntx_rd", 4, 1),
+    DesignPoint("b_ntx_wr", 1, 2),
+    DesignPoint("hb_ntx", 2, 2),
+    DesignPoint("hb_ntx", 4, 2),
+    DesignPoint("lvt", 2, 2),
+    DesignPoint("lvt", 4, 2),
+    DesignPoint("remap", 2, 2),
+    DesignPoint("remap", 4, 2),
+)
+
+DEFAULT_UNROLLS: tuple[int, ...] = (1, 2, 4, 8)
+
+
+@dataclasses.dataclass
+class DSEPoint:
+    bench: str
+    design: str
+    is_amm: bool
+    unroll: int
+    cycles: int
+    cycle_ns: float
+    time_us: float
+    area_mm2: float
+    power_mw: float
+    bank_conflict_stalls: int
+    avg_mem_parallelism: float
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _array_depths(tr: T.Trace) -> dict[int, int]:
+    """Power-of-two depth per array from the trace's max word index."""
+    depths: dict[int, int] = {}
+    m = tr.mem_mask()
+    for aid in tr.array_names:
+        sel = (tr.array_ids == aid) & m
+        if not sel.any():
+            depths[aid] = 16
+            continue
+        max_idx = int(tr.addrs[sel].max()) // tr.word_bytes[aid]
+        depths[aid] = max(16, 1 << (max_idx + 1).bit_length())
+    return depths
+
+
+def _spec_for(dp: DesignPoint, depth: int, width_bits: int) -> AMMSpec:
+    if dp.kind == "banked":
+        nb = min(dp.n_banks, max(depth // 4, 1))
+        return AMMSpec("banked", n_read=2 * nb, n_write=2 * nb,
+                       depth=depth, width=width_bits, n_banks=nb)
+    depth = max(depth, 4 * max(dp.n_read, dp.n_write, 1))
+    return AMMSpec(dp.kind, dp.n_read, dp.n_write, depth, width_bits)
+
+
+def evaluate_point(
+    tr: T.Trace,
+    dp: DesignPoint,
+    unroll: int,
+    mem_latency: int = 2,
+) -> DSEPoint:
+    depths = _array_depths(tr)
+    specs = {
+        aid: _spec_for(dp, depths[aid], tr.word_bytes[aid] * 8)
+        for aid in tr.array_names
+    }
+    cfg = ScheduleConfig(
+        mem=specs,
+        fu_counts={k: v * unroll for k, v in _BASE_FU.items()},
+        mem_latency=mem_latency,
+    )
+    res = schedule(tr, cfg)
+
+    costs = {aid: memory_cost(s) for aid, s in specs.items()}
+    cycle_ns = max([_MIN_CYCLE_NS] + [c.cycle_ns for c in costs.values()])
+    time_us = res.cycles * cycle_ns * 1e-3
+
+    area = sum(c.area_mm2 for c in costs.values())
+    area += sum(FU_AREA_MM2[k] * v * unroll for k, v in _BASE_FU.items())
+
+    # dynamic memory energy
+    m = tr.mem_mask()
+    e_pj = 0.0
+    for aid in tr.array_names:
+        sel = (tr.array_ids == aid) & m
+        loads = int(np.sum(sel & (tr.kinds == T.LOAD)))
+        stores = int(np.sum(sel & (tr.kinds == T.STORE)))
+        e_pj += loads * costs[aid].read_energy_pj + stores * costs[aid].write_energy_pj
+    p_mem_dyn = e_pj / max(time_us, 1e-9) * 1e-3          # pJ/us -> mW
+    p_leak = sum(c.leakage_mw for c in costs.values())
+    # FU power at achieved utilization
+    fu_total = sum(v * unroll for v in _BASE_FU.values())
+    util = min(1.0, res.issued / max(res.cycles * fu_total, 1))
+    p_fu = sum(FU_POWER_MW[k] * v * unroll * util + FU_LEAK_MW[k] * v * unroll
+               for k, v in _BASE_FU.items())
+
+    return DSEPoint(
+        bench=tr.name,
+        design=dp.label,
+        is_amm=dp.is_amm,
+        unroll=unroll,
+        cycles=res.cycles,
+        cycle_ns=cycle_ns,
+        time_us=time_us,
+        area_mm2=area,
+        power_mw=p_mem_dyn + p_leak + p_fu,
+        bank_conflict_stalls=res.bank_conflict_stalls,
+        avg_mem_parallelism=res.avg_mem_parallelism,
+    )
+
+
+def sweep(
+    tr: T.Trace,
+    designs: Sequence[DesignPoint] = DEFAULT_DESIGNS,
+    unrolls: Iterable[int] = DEFAULT_UNROLLS,
+) -> list[DSEPoint]:
+    points = []
+    for dp in designs:
+        for u in unrolls:
+            points.append(evaluate_point(tr, dp, u))
+    return points

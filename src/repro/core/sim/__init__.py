@@ -1,0 +1,8 @@
+from repro.core.sim.scheduler import ScheduleConfig, ScheduleResult, schedule
+from repro.core.sim.trace import (FADD, FDIV, FMUL, IADD, ICMP, IMUL, LOAD,
+                                  LOGIC, STORE, Trace, TraceBuilder)
+
+__all__ = [
+    "Trace", "TraceBuilder", "schedule", "ScheduleConfig", "ScheduleResult",
+    "LOAD", "STORE", "FADD", "FMUL", "FDIV", "IADD", "IMUL", "ICMP", "LOGIC",
+]

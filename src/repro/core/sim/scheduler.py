@@ -1,0 +1,217 @@
+"""Port-constrained cycle-accurate list scheduler (paper III-C).
+
+'The cycle-accurate simulator schedules the data flow graph [...] The
+DAG allows multiple accesses and the scheduler then issues the number of
+accesses requested, accordingly from the read-write port configurations
+and port width defined by the user.'
+
+Resource model per cycle:
+  * per-array memory ports — for conflict-free designs (AMM / ideal):
+    ``n_read`` loads + ``n_write`` stores may issue per cycle, any
+    addresses;
+  * for ``banked``: each bank is an independent dual-port macro; an
+    access issues only if its bank has a port left this cycle — the
+    bank-conflict serialization the paper contrasts AMMs against;
+  * for ``multipump``: 2x ports per external cycle (internally double
+    clocked; the frequency penalty is applied by the cost composition);
+  * functional units — ``fu_counts[kind]`` parallel units, as produced
+    by Aladdin's loop unrolling ('multi-issue ALUs may be constructed by
+    loop unrolling').
+
+The scheduler is event-driven over the trace's DDG: priority = longest
+path to sink (critical path first), standard list scheduling.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+import numpy as np
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.sim import trace as T
+
+
+@dataclasses.dataclass
+class ScheduleConfig:
+    mem: dict[int, AMMSpec]                 # per-array memory design
+    fu_counts: dict[str, int]               # parallel FUs per class
+    mem_latency: int = 2                    # issue-to-data cycles for loads
+    ports_per_bank: int = 2                 # dual-port leaf macros
+    max_cycles: int = 50_000_000
+
+
+@dataclasses.dataclass
+class ScheduleResult:
+    cycles: int
+    issued: int
+    mem_issued: int
+    bank_conflict_stalls: int               # accesses delayed >=1 cycle by banking
+    per_array_accesses: dict[int, int]
+    avg_mem_parallelism: float
+
+    def summary(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _succ_lists(tr: T.Trace) -> tuple[np.ndarray, np.ndarray]:
+    """CSR successor lists from the predecessor CSR."""
+    n = tr.n_nodes
+    counts = np.zeros(n, np.int64)
+    np.add.at(counts, tr.pred_idx, 1)
+    ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    idx = np.empty(int(ptr[-1]), np.int64)
+    fill = ptr[:-1].copy()
+    for i in range(n):
+        lo, hi = tr.pred_ptr[i], tr.pred_ptr[i + 1]
+        for p in tr.pred_idx[lo:hi]:
+            idx[fill[p]] = i
+            fill[p] += 1
+    return ptr, idx
+
+
+def _heights(tr: T.Trace, succ_ptr: np.ndarray, succ_idx: np.ndarray) -> np.ndarray:
+    """Longest path to any sink (list-scheduling priority)."""
+    n = tr.n_nodes
+    h = np.zeros(n, np.int64)
+    for i in range(n - 1, -1, -1):
+        lo, hi = succ_ptr[i], succ_ptr[i + 1]
+        if hi > lo:
+            h[i] = h[succ_idx[lo:hi]].max() + T.LATENCY[int(tr.kinds[i])]
+    return h
+
+
+def schedule(tr: T.Trace, cfg: ScheduleConfig) -> ScheduleResult:
+    n = tr.n_nodes
+    succ_ptr, succ_idx = _succ_lists(tr)
+    height = _heights(tr, succ_ptr, succ_idx)
+    n_preds = (tr.pred_ptr[1:] - tr.pred_ptr[:-1]).astype(np.int64).copy()
+
+    # ready heaps per resource class: ("mem", array_id) or ("fu", class)
+    ready: dict[tuple, list] = {}
+
+    def klass(i: int) -> tuple:
+        k = int(tr.kinds[i])
+        if k <= T.STORE:
+            return ("mem", int(tr.array_ids[i]))
+        return ("fu", T.FU_CLASS[k])
+
+    def push(i: int) -> None:
+        ready.setdefault(klass(i), []).append((-int(height[i]), i))
+
+    for i in np.nonzero(n_preds == 0)[0]:
+        push(int(i))
+    for h in ready.values():
+        heapq.heapify(h)
+
+    inflight: list[tuple[int, int]] = []   # (finish_cycle, node)
+    cycle = 0
+    issued = mem_issued = conflict_stalls = 0
+    per_array: dict[int, int] = {a: 0 for a in tr.array_names}
+    mem_cycles_used = 0
+    remaining = n
+
+    specs = cfg.mem
+
+    while remaining > 0:
+        if cycle > cfg.max_cycles:
+            raise RuntimeError(f"scheduler exceeded {cfg.max_cycles} cycles")
+
+        # ---- retire ----
+        while inflight and inflight[0][0] <= cycle:
+            _, node = heapq.heappop(inflight)
+            remaining -= 1
+            lo, hi = succ_ptr[node], succ_ptr[node + 1]
+            for s in succ_idx[lo:hi]:
+                n_preds[s] -= 1
+                if n_preds[s] == 0:
+                    cls = klass(int(s))
+                    heapq.heappush(ready.setdefault(cls, []), (-int(height[s]), int(s)))
+
+        # ---- issue ----
+        any_mem_this_cycle = 0
+        for cls, heap in list(ready.items()):
+            if not heap:
+                continue
+            if cls[0] == "fu":
+                budget = cfg.fu_counts.get(cls[1], 1)
+                while heap and budget > 0:
+                    _, node = heapq.heappop(heap)
+                    lat = T.LATENCY[int(tr.kinds[node])]
+                    heapq.heappush(inflight, (cycle + lat, node))
+                    issued += 1
+                    budget -= 1
+            else:
+                aid = cls[1]
+                spec = specs[aid]
+                rd_budget = spec.n_read
+                wr_budget = spec.n_write
+                if spec.kind == "multipump":
+                    rd_budget, wr_budget = rd_budget * 2, wr_budget * 2
+                bank_use: dict[int, int] = {}
+                deferred: list[tuple[int, int]] = []
+                # Bound the scan: once every bank is saturated (or we have
+                # burned a generous number of failed pops) nothing further
+                # in this array's heap can issue this cycle.  Without the
+                # cap the deferral loop is O(ready) per cycle -> quadratic.
+                failed_pops = 0
+                max_failed = 4 * spec.n_banks * cfg.ports_per_bank + 8
+                saturated_banks = 0
+                while heap and (rd_budget > 0 or wr_budget > 0):
+                    if spec.kind == "banked" and (
+                        saturated_banks >= spec.n_banks or failed_pops >= max_failed
+                    ):
+                        break
+                    pr, node = heapq.heappop(heap)
+                    is_load = int(tr.kinds[node]) == T.LOAD
+                    if is_load and rd_budget <= 0:
+                        deferred.append((pr, node))
+                        failed_pops += 1
+                        if failed_pops >= max_failed:
+                            break
+                        continue
+                    if not is_load and wr_budget <= 0:
+                        deferred.append((pr, node))
+                        failed_pops += 1
+                        if failed_pops >= max_failed:
+                            break
+                        continue
+                    if spec.kind == "banked":
+                        word = tr.word_bytes[aid]
+                        bank = (int(tr.addrs[node]) // word) % spec.n_banks
+                        if bank_use.get(bank, 0) >= cfg.ports_per_bank:
+                            deferred.append((pr, node))
+                            conflict_stalls += 1
+                            failed_pops += 1
+                            continue
+                        bank_use[bank] = bank_use.get(bank, 0) + 1
+                        if bank_use[bank] == cfg.ports_per_bank:
+                            saturated_banks += 1
+                    lat = cfg.mem_latency if is_load else T.LATENCY[T.STORE]
+                    heapq.heappush(inflight, (cycle + lat, node))
+                    issued += 1
+                    mem_issued += 1
+                    any_mem_this_cycle += 1
+                    per_array[aid] = per_array.get(aid, 0) + 1
+                    if is_load:
+                        rd_budget -= 1
+                    else:
+                        wr_budget -= 1
+                for item in deferred:
+                    heapq.heappush(heap, item)
+        if any_mem_this_cycle:
+            mem_cycles_used += 1
+
+        cycle += 1
+        if not inflight and all(not h for h in ready.values()) and remaining > 0:
+            raise RuntimeError("deadlock: nodes remain but nothing ready/inflight")
+
+    return ScheduleResult(
+        cycles=cycle,
+        issued=issued,
+        mem_issued=mem_issued,
+        bank_conflict_stalls=conflict_stalls,
+        per_array_accesses=per_array,
+        avg_mem_parallelism=mem_issued / max(mem_cycles_used, 1),
+    )

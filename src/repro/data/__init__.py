@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, PrefetchLoader, SyntheticCorpus
+
+__all__ = ["DataConfig", "SyntheticCorpus", "PrefetchLoader"]

@@ -1,0 +1,3 @@
+from repro.kernels.ops import amm_gather, kv_decode, pack_amm_banks, ssd_chunk
+
+__all__ = ["amm_gather", "kv_decode", "ssd_chunk", "pack_amm_banks"]

@@ -1,0 +1,74 @@
+"""Banked KV-cache flash-decode — the paper's banking idea applied to
+the decode-attention hot loop.
+
+The KV cache of one (batch, kv-head) is partitioned into ``n_banks``
+sequence banks (independent VMEM tiles).  A decode step is a multi-port
+read burst over those banks; the kernel streams the banks with the
+online-softmax (flash) recurrence, so each bank is read exactly once
+per step and never materializes an [S] score vector in HBM.
+
+Grid: (batch, q_heads).  GQA is handled in the index_map — q head h
+reads kv head h // group.  Per grid cell:
+  q:   [D]                (block of the [B, Hq, D] query)
+  k/v: [NB, SB, D]        (that kv head's banked cache)
+  out: [D]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, out_ref, *, n_banks: int,
+            bank_len: int, scale: float):
+    q = q_ref[0, 0, :].astype(jnp.float32)                 # [D]
+    kv_len = len_ref[0]
+
+    def bank_body(j, carry):
+        m, l, acc = carry
+        k = k_ref[0, 0, j].astype(jnp.float32)             # [SB, D]
+        v = v_ref[0, 0, j].astype(jnp.float32)
+        s = jnp.dot(k, q) * scale                          # [SB]
+        pos = j * bank_len + jax.lax.iota(jnp.int32, bank_len)
+        s = jnp.where(pos < kv_len, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(pos < kv_len, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p)
+        acc_new = acc * alpha + jnp.dot(p, v)              # [D]
+        return m_new, l_new, acc_new
+
+    d = q.shape[0]
+    m0 = jnp.float32(-1e30)
+    l0 = jnp.float32(0.0)
+    a0 = jnp.zeros((d,), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_banks, bank_body, (m0, l0, a0))
+    out_ref[0, 0, :] = (acc / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+
+
+def banked_kv_decode(q: jax.Array, k_banks: jax.Array, v_banks: jax.Array,
+                     lengths: jax.Array, interpret: bool = True) -> jax.Array:
+    """q: [B, Hq, D]; k/v_banks: [B, Hkv, NB, SB, D]; lengths: [B] int32.
+    Returns [B, Hq, D]."""
+    b, hq, d = q.shape
+    _, hkv, nb, sb, _ = k_banks.shape
+    group = hq // hkv
+    scale = 1.0 / (d ** 0.5)
+    grid = (b, hq)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_banks=nb, bank_len=sb, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, h: (i,)),
+            pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
+            pl.BlockSpec((1, 1, nb, sb, d), lambda i, h: (i, h // group, 0, 0, 0)),
+            pl.BlockSpec((1, 1, nb, sb, d), lambda i, h: (i, h // group, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+    )(lengths, q, k_banks, v_banks)

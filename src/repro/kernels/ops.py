@@ -1,0 +1,70 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Kernels are written for TPU (pl.pallas_call + BlockSpec VMEM tiling) and
+validated on CPU with ``interpret=True`` (the default off-TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.amm_gather import amm_gather_u32
+from repro.kernels.banked_kv_decode import banked_kv_decode
+from repro.kernels.ssd_scan import ssd_chunk_step
+
+_UINT_FOR = {2: jnp.uint16, 4: jnp.uint32}
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pack_amm_banks(table: jax.Array, n_banks: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Depth-partition [V, D] into XOR banks [NB, V/NB, D] + parity."""
+    v, d = table.shape
+    assert v % n_banks == 0, "table depth must divide into banks"
+    u = _UINT_FOR[table.dtype.itemsize]
+    banks = jax.lax.bitcast_convert_type(table, u).reshape(
+        n_banks, v // n_banks, d)
+    parity = banks[0]
+    for j in range(1, n_banks):
+        parity = parity ^ banks[j]
+    return banks, parity
+
+
+@partial(jax.jit, static_argnames=("n_banks", "interpret"))
+def amm_gather(table: jax.Array, idx: jax.Array, n_banks: int = 4,
+               interpret: bool | None = None) -> jax.Array:
+    """Conflict-free XOR-banked gather.  table: [V, D]; idx: [N]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    banks, parity = pack_amm_banks(table, n_banks)
+    out = amm_gather_u32(banks, parity, idx.astype(jnp.int32),
+                         interpret=interpret)
+    return jax.lax.bitcast_convert_type(out, table.dtype)
+
+
+@partial(jax.jit, static_argnames=("n_banks", "interpret"))
+def kv_decode(q: jax.Array, k: jax.Array, v: jax.Array, lengths: jax.Array,
+              n_banks: int = 8, interpret: bool | None = None) -> jax.Array:
+    """Flash-decode over a bank-partitioned KV cache.
+    q: [B, Hq, D]; k/v: [B, Hkv, S, D]; lengths: [B]."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, hkv, s, d = k.shape
+    assert s % n_banks == 0
+    kb = k.reshape(b, hkv, n_banks, s // n_banks, d)
+    vb = v.reshape(b, hkv, n_banks, s // n_banks, d)
+    return banked_kv_decode(q, kb, vb, lengths.astype(jnp.int32),
+                            interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, cum, B, C, h_in, interpret: bool | None = None):
+    """One SSD chunk step (see ssd_scan.py for the contract)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return ssd_chunk_step(x, dt, cum, B, C, h_in, interpret=interpret)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose
+kernel-vs-ref across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def amm_gather_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """table: [V, D]; idx: [N] -> [N, D]."""
+    return jnp.take(table, idx, axis=0)
+
+
+def kv_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  lengths: jax.Array) -> jax.Array:
+    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; lengths: [B] -> [B, Hq, D]."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(d)
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def ssd_chunk_ref(x, dt, cum, B, C, h_in):
+    """Same contract as ssd_scan.ssd_chunk_step, dense einsums."""
+    la = jnp.where(
+        jnp.arange(cum.shape[-1])[None, None, :, None]
+        >= jnp.arange(cum.shape[-1])[None, None, None, :],
+        cum[..., :, None] - cum[..., None, :], -1e30)
+    decay = jnp.exp(la)                                        # [b,h,i,j]
+    scores = jnp.einsum("bin,bjn->bij", C.astype(jnp.float32),
+                        B.astype(jnp.float32))[:, None] * decay
+    y = jnp.einsum("bhij,bhj,bhjp->bhip", scores, dt.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    y = y + jnp.einsum("bin,bhi,bhpn->bhip", C.astype(jnp.float32),
+                       jnp.exp(cum), h_in.astype(jnp.float32))
+    tail = jnp.exp(cum[..., -1:] - cum) * dt                   # [b,h,q]
+    h_out = jnp.exp(cum[..., -1])[..., None, None] * h_in + jnp.einsum(
+        "bhj,bhjp,bjn->bhpn", tail, x.astype(jnp.float32),
+        B.astype(jnp.float32))
+    return y, h_out

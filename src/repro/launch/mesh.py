@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; multi-pod adds a leading pod=2 axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            f"(see launch/dryrun.py)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")) -> jax.sharding.Mesh:
+    """Small mesh for CPU integration tests (subprocess sets device count)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,344 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Three terms per (arch x shape x mesh), in seconds per step:
+
+  compute    = dot_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+Methodology (documented in EXPERIMENTS.md §Roofline): plain
+``compiled.cost_analysis()`` counts every while (lax.scan) body ONCE —
+with scan-over-layers + microbatch accumulation that under-counts flops
+by ~L x accum (verified empirically: 9x on qwen3).  We therefore walk
+the post-optimization HLO text ourselves:
+
+  * computations are parsed into a call graph; ``while`` ops carry
+    ``backend_config known_trip_count`` which we use as multipliers
+    (conditional branches contribute their max; fusions are traversed);
+  * compute = 2 * prod(result_dims) * prod(contracted lhs dims) summed
+    over every ``dot`` (matmul-only — elementwise flops are noise at
+    these scales);
+  * memory  = operand + result bytes of every ``dot`` plus result bytes
+    of ``gather``/``reduce`` ops.  CPU HLO materializes elementwise
+    chains a TPU would fuse, so counting every instruction massively
+    overstates HBM traffic; matmul operands/results and table gathers
+    are the traffic that cannot fuse away.  The launcher adds analytic
+    optimizer-update traffic (pure elementwise, invisible to this
+    counter) on top for train cells;
+  * collective = result-shape payload of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute (the partitioned
+    module's shapes are per-device, so terms are per-chip directly),
+    scaled by the ring cost factor per kind (all-reduce moves
+    2(n-1)/n ~ 2x its payload per device; gather/scatter/a2a ~ 1x).
+
+dtype correction: XLA:CPU legalizes bf16 dots to f32, so the dry-run
+HLO shows f32 activations/collectives that are bf16 on TPU.  With
+``f32_as_bf16=True`` (the launcher default) f32 payloads are counted at
+2 bytes — matching the TPU execution our dtype policy produces (bf16
+compute, bf16 grad accumulation/reduction; fp32 master weights never
+cross chips).
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+HW = {
+    "peak_flops": 197e12,
+    "hbm_bw": 819e9,
+    "link_bw": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b(?P<dt>(?:f|bf|s|u|c)[0-9]+(?:e[0-9]+m[0-9]+\w*)?|pred)"
+    r"\[(?P<dims>[0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%(?P<name>[\w\.\-]+)\s*=\s*"
+                       r"(?P<rest>.*)$")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s*\(.*\{")
+_OPNAME_RE = re.compile(
+    r"^(?P<shape>(?:\([^)]*\)|[\w\[\],\{\}\s\/\*]+?))\s+"
+    r"(?P<op>[\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?\{?%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true|false)_computation=%([\w\.\-]+)")
+
+
+# per-device ring traffic per byte of payload
+_RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_list_bytes(text: str, f32_as_bf16: bool = False) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group("dims").split(","):
+            if d:
+                n *= int(d)
+        nbytes = _DTYPE_BYTES[dt]
+        if f32_as_bf16 and dt == "f32":
+            nbytes = 2   # CPU-legalized bf16 (see module docstring)
+        total += n * nbytes
+    return total
+
+
+def _shape_dims(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group("dims").split(",") if d]
+        out.append((m.group("dt"), dims))
+    return out
+
+
+@dataclasses.dataclass
+class _Comp:
+    flops: float = 0.0
+    bytes_rw: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    # (kind, callee, multiplier); kind in {"while","call","branch","fusion"}
+    calls: list[tuple[str, str, float]] = dataclasses.field(
+        default_factory=list)
+    branch_groups: list[list[str]] = dataclasses.field(default_factory=list)
+
+
+_SKIP_BYTES_OPS = {
+    "parameter", "tuple", "get-tuple-element", "constant", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+
+class HloAnalysis:
+    """Trip-count-aware flops/bytes/collectives from HLO text."""
+
+    def __init__(self, hlo_text: str, f32_as_bf16: bool = False) -> None:
+        self.comps: dict[str, _Comp] = {}
+        self.entry: str | None = None
+        self._f32bf16 = f32_as_bf16
+        self._parse(hlo_text)
+        self._memo: dict[str, tuple[float, float, dict]] = {}
+
+    def _b(self, text: str) -> int:
+        return _shape_list_bytes(text, self._f32bf16)
+
+    # ------------------------------------------------------------------
+    def _parse(self, txt: str) -> None:
+        cur: _Comp | None = None
+        cur_name = None
+        shapes: dict[str, str] = {}
+        for raw in txt.splitlines():
+            if raw.startswith("}"):
+                cur = None
+                continue
+            h = _HEADER_RE.match(raw)
+            if h and not raw.startswith(" "):
+                cur_name = h.group("name")
+                cur = _Comp()
+                self.comps[cur_name] = cur
+                shapes = {}
+                if raw.startswith("ENTRY"):
+                    self.entry = cur_name
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(raw)
+            if not mi:
+                continue
+            name, rest = mi.group("name"), mi.group("rest")
+            om = _OPNAME_RE.match(rest)
+            if not om:
+                continue
+            shape_txt, op = om.group("shape").strip(), om.group("op")
+            shapes[name] = shape_txt
+
+            if op in _COLLECTIVES or any(
+                    op == c + sfx for c in _COLLECTIVES
+                    for sfx in ("-start",)):
+                base = op[:-6] if op.endswith("-start") else op
+                cur.coll[base] += _RING_FACTOR[base] * self._b(shape_txt)
+                cur.bytes_rw += self._b(shape_txt)
+                continue
+            if op == "while":
+                b = _BODY_RE.search(rest)
+                t = _TRIP_RE.search(rest)
+                if b:
+                    cur.calls.append(
+                        ("while", b.group(1), float(t.group(1)) if t else 1.0))
+                continue
+            if op == "conditional":
+                br = _BRANCHES_RE.search(rest)
+                group = []
+                if br:
+                    group = re.findall(r"%([\w\.\-]+)", br.group(1))
+                else:
+                    group = _TF_RE.findall(rest)
+                if group:
+                    cur.branch_groups.append(group)
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "sort", "scatter", "reduce-window", "select-and-scatter"):
+                cm = _CALLS_RE.search(rest)
+                if cm and op in ("fusion", "call", "map"):
+                    cur.calls.append(("call", cm.group(1), 1.0))
+                if op in ("scatter", "sort", "reduce"):
+                    cur.bytes_rw += 2 * self._b(shape_txt)
+                continue
+            if op == "dot":
+                # operands: dot(%a, %b); resolve shapes from symbol table
+                args = re.findall(r"%([\w\.\-]+)", rest.split("dot(", 1)[1]
+                                  .split(")", 1)[0])
+                res_dims = _shape_dims(shape_txt)
+                res_n = 1
+                for _, dims in res_dims[:1]:
+                    for d in dims:
+                        res_n *= d
+                k = 1
+                mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+                if args and args[0] in shapes and mcd:
+                    lhs_dims = _shape_dims(shapes[args[0]])
+                    if lhs_dims:
+                        dims = lhs_dims[0][1]
+                        for idx in mcd.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                k *= dims[int(idx)]
+                cur.flops += 2.0 * res_n * k
+                # HBM traffic: both operands + the result
+                cur.bytes_rw += self._b(shape_txt)
+                for a in args[:2]:
+                    if a in shapes:
+                        cur.bytes_rw += self._b(shapes[a])
+                continue
+            if op in ("gather", "dynamic-slice"):
+                cur.bytes_rw += 2 * self._b(shape_txt)
+
+    # ------------------------------------------------------------------
+    def _total(self, name: str, depth: int = 0
+               ) -> tuple[float, float, dict[str, float]]:
+        if name in self._memo:
+            return self._memo[name]
+        if name not in self.comps or depth > 64:
+            return 0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}
+        c = self.comps[name]
+        fl, by = c.flops, c.bytes_rw
+        co = dict(c.coll)
+        for kind, callee, mult in c.calls:
+            f2, b2, c2 = self._total(callee, depth + 1)
+            fl += mult * f2
+            by += mult * b2
+            for k in co:
+                co[k] += mult * c2[k]
+        for group in c.branch_groups:
+            totals = [self._total(g, depth + 1) for g in group]
+            if totals:
+                best = max(totals, key=lambda t: t[0] + t[1])
+                fl += best[0]
+                by += best[1]
+                for k in co:
+                    co[k] += best[2][k]
+        self._memo[name] = (fl, by, co)
+        return self._memo[name]
+
+    def totals(self) -> tuple[float, float, dict[str, float]]:
+        if self.entry is None:
+            return 0.0, 0.0, {k: 0.0 for k in _COLLECTIVES}
+        return self._total(self.entry)
+
+
+def analyze_hlo(hlo_text: str, f32_as_bf16: bool = True) -> dict:
+    fl, by, co = HloAnalysis(hlo_text, f32_as_bf16).totals()
+    return {"flops": fl, "bytes": by, "collectives": co,
+            "collective_bytes": sum(co.values())}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Trip-count-aware per-kind collective payload bytes."""
+    _, _, co = HloAnalysis(hlo_text).totals()
+    return {k: int(v) for k, v in co.items()}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    collectives: dict[str, float]
+    model_flops_global: float
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / HW["peak_flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / HW["link_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Perfect-overlap lower bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s, 1e-12)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops x chips) — remat/redundancy waste."""
+        hw = self.flops_per_device * self.chips
+        return self.model_flops_global / hw if hw else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline-bound step time."""
+        denom = self.step_s * self.chips * HW["peak_flops"]
+        return self.model_flops_global / denom if denom else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "useful_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(arch_params: int, tokens: int, kind: str,
+                active_params: int | None = None) -> float:
+    """6*N*D for training, 2*N_active per generated token otherwise."""
+    n = active_params or arch_params
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

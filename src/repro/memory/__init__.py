@@ -1,0 +1,8 @@
+from repro.memory.embedding import banked_embedding_lookup
+from repro.memory.kv_cache import BankedKVCache
+from repro.memory.planner import (AMM_LOCALITY_THRESHOLD, MemoryPlan,
+                                  StreamPlan, plan_memory)
+
+__all__ = ["plan_memory", "MemoryPlan", "StreamPlan",
+           "AMM_LOCALITY_THRESHOLD", "banked_embedding_lookup",
+           "BankedKVCache"]

@@ -1,0 +1,30 @@
+"""Banked embedding table: the AMM plan applied to vocab gathers.
+
+``banked_embedding_lookup`` routes through the XOR-banked Pallas kernel
+when the planner chose AMM for the embedding stream (low-locality,
+zipf-skewed token ids); otherwise it uses the plain XLA gather.  On
+non-TPU backends the kernel runs in interpret mode — tests assert both
+paths agree bit-exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import amm_gather
+from repro.memory.planner import MemoryPlan, StreamPlan
+
+
+def banked_embedding_lookup(table: jax.Array, token_ids: jax.Array,
+                            plan: StreamPlan | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """table: [V, D]; token_ids: [...] int -> [..., D]."""
+    flat = token_ids.reshape(-1)
+    if plan is not None and plan.use_amm and table.shape[0] % plan.n_banks == 0:
+        n = flat.shape[0]
+        block = 128 if n % 128 == 0 else 1
+        out = amm_gather(table, flat, n_banks=plan.n_banks,
+                         interpret=interpret)
+    else:
+        out = jnp.take(table, flat, axis=0)
+    return out.reshape(*token_ids.shape, table.shape[1])

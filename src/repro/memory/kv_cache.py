@@ -1,0 +1,55 @@
+"""Banked KV cache: the AMM plan applied to decode attention.
+
+The cache for one layer is [B, Hkv, S, D]; the plan's bank count
+partitions S into independent banks (cluster analogue: one bank = one
+"model"-axis shard, see launch/sharding.cache_pspecs).  ``decode_read``
+is the multi-port read burst of a decode step, served by the banked
+flash-decode Pallas kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kv_decode
+from repro.memory.planner import StreamPlan
+
+
+@dataclasses.dataclass
+class BankedKVCache:
+    k: jax.Array            # [B, Hkv, S, D]
+    v: jax.Array
+    length: jax.Array       # [B] int32 current lengths
+    n_banks: int = 8
+
+    @classmethod
+    def create(cls, batch: int, n_kv_heads: int, max_len: int, head_dim: int,
+               dtype=jnp.bfloat16, plan: StreamPlan | None = None
+               ) -> "BankedKVCache":
+        nb = plan.n_banks if (plan and plan.use_amm) else 8
+        nb = min(nb, max_len)
+        while max_len % nb:
+            nb //= 2
+        return cls(
+            k=jnp.zeros((batch, n_kv_heads, max_len, head_dim), dtype),
+            v=jnp.zeros((batch, n_kv_heads, max_len, head_dim), dtype),
+            length=jnp.zeros((batch,), jnp.int32),
+            n_banks=max(nb, 1),
+        )
+
+    def append(self, k_new: jax.Array, v_new: jax.Array) -> "BankedKVCache":
+        """k/v_new: [B, Hkv, 1, D] at each sequence's current length.
+        (Uniform-length batches use the same scalar position.)"""
+        pos = self.length[0]
+        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), pos, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), pos, axis=2)
+        return dataclasses.replace(self, k=k, v=v, length=self.length + 1)
+
+    def decode_read(self, q: jax.Array, interpret: bool | None = None
+                    ) -> jax.Array:
+        """q: [B, Hq, D] -> attention output [B, Hq, D] via the banked
+        flash-decode kernel."""
+        return kv_decode(q, self.k, self.v, self.length,
+                         n_banks=self.n_banks, interpret=interpret)

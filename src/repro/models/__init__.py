@@ -1,0 +1,8 @@
+from repro.models.common import DTypePolicy, count_params
+from repro.models.lm import (decode_step, forward, init_model, loss_fn,
+                             make_cache, prefill)
+
+__all__ = [
+    "DTypePolicy", "count_params", "init_model", "forward", "loss_fn",
+    "make_cache", "prefill", "decode_step",
+]

@@ -1,0 +1,343 @@
+"""Attention variants: GQA (w/ optional qk-norm) and MLA (multi-head
+latent attention, MiniCPM3/DeepSeek-V2 style).
+
+Full-sequence attention is computed *blockwise* over KV chunks with an
+online-softmax accumulator (flash-attention recurrence in pure JAX via
+``lax.scan``) so the [S, S] score matrix is never materialized — at
+prefill_32k a materialized score tensor would be O(S^2) HBM and the
+dry-run would not fit.  The Pallas TPU kernel in ``repro.kernels`` is
+the hardware-target twin of this reference.
+
+Decode (single new token against a cached KV of length S) is a separate
+path; with ``kv_seq_shard`` the cache's length axis is sharded over the
+"model" mesh axis and XLA inserts the partial-softmax reduction
+(baseline) — the shard_map flash-decode in lm.py is the optimized form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import (Params, apply_rope, dense_init, norm_init,
+                                 rms_norm)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    causal: bool = True
+    # MLA (attn_type == "mla")
+    attn_type: str = "gqa"            # "gqa" | "mla"
+    q_lora_rank: int = 0              # 0 = full-rank q projection
+    kv_lora_rank: int = 0
+    rope_head_dim: int = 0            # decoupled rope dims (MLA)
+    block_q: int = 512
+    block_kv: int = 1024
+    # kv replication factor: full-seq paths repeat kv heads so that the
+    # head axis divides the TP degree exactly (Megatron kv replication)
+    kv_repeat: int = 1
+
+
+# ======================================================================
+# Blockwise (flash-style) attention core
+# ======================================================================
+def _flash_block_scan(q, k, v, causal: bool, q_offset, block_kv: int,
+                      bias=None):
+    """Online-softmax attention.
+
+    q: [B, Hq, Sq, D]; k/v: [B, Hkv, Skv, D]; returns [B, Hq, Sq, D].
+    Group-query: Hq is a multiple of Hkv; handled by reshaping q into
+    [B, Hkv, G, Sq, D] so each KV head serves G query heads.
+    """
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+
+    n_blocks = -(-skv // block_kv)
+    pad = n_blocks * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(b, hkv, n_blocks, block_kv, d)
+    vb = v.reshape(b, hkv, n_blocks, block_kv, d)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kv_i, k_i, v_i = xs
+        kv_pos = kv_i * block_kv + jnp.arange(block_kv)
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                       k_i.astype(jnp.float32)) * scale
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((sq, block_kv), bool)
+        mask = jnp.logical_and(mask, (kv_pos < skv)[None, :])
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_i.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    kb_t = jnp.moveaxis(kb, 2, 0)   # [n_blocks, B, Hkv, bk, D]
+    vb_t = jnp.moveaxis(vb, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_blocks), kb_t, vb_t))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, q_offset=0, block_kv=1024):
+    return _flash_block_scan(q, k, v, causal, q_offset, block_kv)
+
+
+# ======================================================================
+# GQA
+# ======================================================================
+def gqa_init(key: jax.Array, cfg: AttnConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d, hd = cfg.d_model, cfg.head_dim
+    p: Params = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_init(hd)
+        p["k_norm"] = norm_init(hd)
+    return p
+
+
+def _project_qkv(params: Params, cfg: AttnConfig, x: jax.Array,
+                 positions: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"])
+        k = rms_norm(k, params["k_norm"]["scale"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _replicate_kv(cfg: AttnConfig, k: jax.Array, v: jax.Array):
+    """Repeat kv heads so the head axis divides TP exactly (Megatron kv
+    replication).  GQA math is unchanged — property-tested."""
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=2)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=2)
+    return k, v
+
+
+def gqa_apply(params: Params, cfg: AttnConfig, x: jax.Array,
+              positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence (train / prefill) GQA."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    k, v = _replicate_kv(cfg, k, v)
+    out = flash_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=cfg.causal, block_kv=cfg.block_kv)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def gqa_prefill(params: Params, cfg: AttnConfig, x: jax.Array,
+                positions: jax.Array | None = None):
+    """Returns (attn_out, (k_cache, v_cache)) with caches [B, Hkv, S, D]."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    kc, vc = jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2)  # cache: real heads
+    kr, vr = _replicate_kv(cfg, k, v)
+    out = flash_attention(jnp.swapaxes(q, 1, 2), jnp.swapaxes(kr, 1, 2),
+                          jnp.swapaxes(vr, 1, 2),
+                          causal=cfg.causal, block_kv=cfg.block_kv)
+    out = jnp.swapaxes(out, 1, 2).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"].astype(x.dtype), (kc, vc)
+
+
+def gqa_decode(params: Params, cfg: AttnConfig, x: jax.Array,
+               cache: tuple[jax.Array, jax.Array], cache_len: jax.Array):
+    """One-token decode. x: [B, 1, D_model]; cache [B, Hkv, S_max, D]."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    positions = jnp.full((1,), cache_len, jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    kc, vc = cache
+    kc = jax.lax.dynamic_update_slice_in_dim(
+        kc, jnp.swapaxes(k, 1, 2).astype(kc.dtype), cache_len, axis=2)
+    vc = jax.lax.dynamic_update_slice_in_dim(
+        vc, jnp.swapaxes(v, 1, 2).astype(vc.dtype), cache_len, axis=2)
+    s_max = kc.shape[2]
+    qh = jnp.swapaxes(q, 1, 2)                       # [B, Hq, 1, D]
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = qh.reshape(b, cfg.n_kv_heads, g, hd)
+    scores = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
+                        kc.astype(jnp.float32)) / jnp.sqrt(hd)
+    valid = jnp.arange(s_max)[None, None, None, :] <= cache_len
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bhsd->bhgd", w, vc.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), (kc, vc)
+
+
+# ======================================================================
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2)
+# ======================================================================
+def mla_init(key: jax.Array, cfg: AttnConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    d, hd, r = cfg.d_model, cfg.head_dim, cfg.rope_head_dim
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    p: Params = {
+        # q: d -> q_lora -> heads*(nope+rope)
+        "wq_a": dense_init(ks[0], d, qr),
+        "q_a_norm": norm_init(qr),
+        "wq_b": dense_init(ks[1], qr, cfg.n_heads * (hd + r)),
+        # kv: d -> kv_lora (+ shared k_rope)
+        "wkv_a": dense_init(ks[2], d, kvr + r),
+        "kv_a_norm": norm_init(kvr),
+        # up-projections from the latent
+        "wk_b": dense_init(ks[3], kvr, cfg.n_heads * hd),
+        "wv_b": dense_init(ks[4], kvr, cfg.n_heads * hd),
+        "wo": dense_init(ks[5], cfg.n_heads * hd, d),
+    }
+    return p
+
+
+def _mla_qkv_full(params: Params, cfg: AttnConfig, x: jax.Array,
+                  positions: jax.Array):
+    b, s, _ = x.shape
+    hd, r, kvr = cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    qa = rms_norm(x @ params["wq_a"].astype(x.dtype),
+                  params["q_a_norm"]["scale"])
+    q = (qa @ params["wq_b"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd + r)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"].astype(x.dtype)                  # [B,S,kvr+r]
+    c_kv = rms_norm(kv[..., :kvr], params["kv_a_norm"]["scale"])
+    k_rope = apply_rope(kv[..., kvr:][:, :, None, :], positions,
+                        cfg.rope_theta)                        # [B,S,1,r]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(params: Params, cfg: AttnConfig, x: jax.Array,
+              positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence MLA: expand the latent to per-head K/V, then flash."""
+    b, s, _ = x.shape
+    hd, r = cfg.head_dim, cfg.rope_head_dim
+    if positions is None:
+        positions = jnp.arange(s)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_full(params, cfg, x, positions)
+    k_nope = (c_kv @ params["wk_b"].astype(x.dtype)).reshape(
+        b, s, cfg.n_heads, hd)
+    v = (c_kv @ params["wv_b"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    # fold the decoupled rope part into the head dim (shared k_rope per head)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (b, s, cfg.n_heads, r))], axis=-1)
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, r)))
+    out = flash_attention(
+        jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v_pad, 1, 2), causal=cfg.causal, block_kv=cfg.block_kv)
+    out = jnp.swapaxes(out, 1, 2)[..., :hd].reshape(b, s, cfg.n_heads * hd)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def mla_prefill(params: Params, cfg: AttnConfig, x: jax.Array,
+                positions: jax.Array | None = None):
+    """Cache only the latent (c_kv) + shared rope key — MLA's memory win."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    out = mla_apply(params, cfg, x, positions)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv_full(params, cfg, x, positions)
+    return out, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(params: Params, cfg: AttnConfig, x: jax.Array,
+               cache: tuple[jax.Array, jax.Array], cache_len: jax.Array,
+               absorb: bool = False):
+    """One-token MLA decode against latent cache (c_kv [B,S,kvr],
+    k_rope [B,S,r]).
+
+    absorb=False (baseline): expand latent to per-head K/V each step.
+    absorb=True (optimized): score/accumulate in latent space — the
+    W_UK/W_UV absorption trick; O(S*kvr) instead of O(S*H*hd) bytes.
+    """
+    b = x.shape[0]
+    hd, r, kvr = cfg.head_dim, cfg.rope_head_dim, cfg.kv_lora_rank
+    positions = jnp.full((1,), cache_len, jnp.int32)
+    q_nope, q_rope, c_new, k_rope_new = _mla_qkv_full(params, cfg, x, positions)
+    c_cache, r_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), cache_len, axis=1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(
+        r_cache, k_rope_new[:, :, 0, :].astype(r_cache.dtype), cache_len, axis=1)
+    s_max = c_cache.shape[1]
+    valid = (jnp.arange(s_max)[None, None, :] <= cache_len)
+
+    q_nope_h = q_nope[:, 0]                       # [B, H, hd]
+    q_rope_h = q_rope[:, 0]                       # [B, H, r]
+    scale = 1.0 / jnp.sqrt(hd + r)
+
+    if absorb:
+        wk = params["wk_b"].reshape(kvr, cfg.n_heads, hd)
+        q_lat = jnp.einsum("bhd,khd->bhk", q_nope_h.astype(jnp.float32),
+                           wk.astype(jnp.float32))            # [B,H,kvr]
+        s_lat = jnp.einsum("bhk,bsk->bhs", q_lat,
+                           c_cache.astype(jnp.float32))
+        s_rope = jnp.einsum("bhr,bsr->bhs", q_rope_h.astype(jnp.float32),
+                            r_cache.astype(jnp.float32))
+        scores = (s_lat + s_rope) * scale
+        scores = jnp.where(valid, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        ctx_lat = jnp.einsum("bhs,bsk->bhk", w, c_cache.astype(jnp.float32))
+        wv = params["wv_b"].reshape(kvr, cfg.n_heads, hd)
+        out = jnp.einsum("bhk,khd->bhd", ctx_lat, wv.astype(jnp.float32))
+    else:
+        k_nope = jnp.einsum("bsk,kD->bsD", c_cache.astype(jnp.float32),
+                            params["wk_b"].astype(jnp.float32)).reshape(
+            b, s_max, cfg.n_heads, hd)
+        v_full = jnp.einsum("bsk,kD->bsD", c_cache.astype(jnp.float32),
+                            params["wv_b"].astype(jnp.float32)).reshape(
+            b, s_max, cfg.n_heads, hd)
+        s_nope = jnp.einsum("bhd,bshd->bhs", q_nope_h.astype(jnp.float32),
+                            k_nope)
+        s_rope = jnp.einsum("bhr,bsr->bhs", q_rope_h.astype(jnp.float32),
+                            r_cache.astype(jnp.float32))
+        scores = (s_nope + s_rope) * scale
+        scores = jnp.where(valid, scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhs,bshd->bhd", w, v_full)
+
+    out = out.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), (c_cache, r_cache)

@@ -1,0 +1,28 @@
+"""Feed-forward variants: gated (SwiGLU) and plain (squared-ReLU etc.)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, Params, dense_init
+
+
+def mlp_init(key: jax.Array, d_model: int, d_ff: int, gated: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p: Params = {
+        "w_up": dense_init(ks[0], d_model, d_ff),
+        "w_down": dense_init(ks[1], d_ff, d_model),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp_apply(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    f = ACTIVATIONS[act]
+    up = x @ params["w_up"].astype(x.dtype)
+    if "w_gate" in params:
+        up = f(x @ params["w_gate"].astype(x.dtype)) * up
+    else:
+        up = f(up)
+    return up @ params["w_down"].astype(x.dtype)

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer with sort-free capacity dispatch.
+
+Routing: top-k softmax gating.  Dispatch builds, per expert, a dense
+[E, C] table of token slots (C = capacity) via cumulative positions —
+no [T, E, C] one-hot tensor is ever materialized (that einsum dominates
+memory at 32k tokens x 64 experts).  Expert FFNs run as a batched
+einsum over the expert axis, which shards cleanly over the "model" mesh
+axis (expert parallelism); XLA inserts the token all-to-all.
+
+This is also where the paper's lens applies at cluster scale: expert
+banks are a multi-ported memory, tokens are read requests, and top-k
+routing of a skewed token distribution is exactly a low-spatial-locality
+multi-port access pattern (see repro.memory.planner).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ACTIVATIONS, Params, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    act: str = "silu"
+    gated: bool = True
+
+
+def moe_init(key: jax.Array, cfg: MoEConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+
+    def expert_stack(k, d_in, d_out):
+        return jax.vmap(lambda kk: dense_init(kk, d_in, d_out))(
+            jax.random.split(k, e))
+
+    p: Params = {
+        "router": dense_init(ks[0], d, e),
+        "w_up": expert_stack(ks[1], d, f),
+        "w_down": expert_stack(ks[2], f, d),
+    }
+    if cfg.gated:
+        p["w_gate"] = expert_stack(ks[3], d, f)
+    return p
+
+
+def moe_apply(params: Params, cfg: MoEConfig, x: jax.Array) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D].  Tokens over capacity are dropped
+    (standard capacity-based MoE; the residual path carries them).
+
+    Dispatch is *per sequence*: each batch row computes its own expert
+    queue positions (cumsum along S*K only).  This keeps the dispatch
+    math batch-local, so with batch sharded over "data" and experts over
+    "model" the only cross-device movement is the token all-to-all —
+    a global cumsum over the sharded token axis would serialize across
+    devices (measured collective-bound dbrx/moonshot baselines,
+    EXPERIMENTS.md §Perf iteration 3)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(cfg.capacity_factor * s * k / e), 1)
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)                    # [B, S, E]
+    top_g, top_e = jax.lax.top_k(gates, k)                     # [B, S, K]
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's per-row queue
+    flat_e = top_e.reshape(b, s * k)                           # [B, S*K]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # [B, S*K, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1                       # row-local
+    slot = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = slot < cap
+
+    # scatter row-token ids into the per-row dispatch table [B, E, C]
+    dest = jnp.where(keep, flat_e * cap + slot, e * cap)       # overflow bin
+    token_ids = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)[None, :]
+    table = jnp.full((b, e * cap + 1), s, jnp.int32)           # s = pad token
+    table = jax.vmap(lambda t_, d_, i_: t_.at[d_].set(i_, mode="drop"))(
+        table, dest, jnp.broadcast_to(token_ids, dest.shape))
+    table = table[:, :-1].reshape(b, e, cap)                   # [B, E, C]
+
+    # gather expert inputs; pad row s reads zeros
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        x_pad[:, :, None, :], table.reshape(b, e * cap, 1, 1), axis=1
+    ).reshape(b, e, cap, d)
+
+    f = ACTIVATIONS[cfg.act]
+    up = jnp.einsum("becd,edf->becf", xe, params["w_up"].astype(x.dtype))
+    if cfg.gated:
+        up = f(jnp.einsum("becd,edf->becf", xe,
+                          params["w_gate"].astype(x.dtype))) * up
+    else:
+        up = f(up)
+    ye = jnp.einsum("becf,efd->becd", up, params["w_down"].astype(x.dtype))
+
+    # combine back with gate weights (row-local scatter-add)
+    gate_tbl = jax.vmap(lambda d_, g_: jnp.zeros(
+        (e * cap + 1,), jnp.float32).at[d_].set(g_, mode="drop"))(
+        dest, top_g.reshape(b, s * k))[:, :-1].reshape(b, e, cap)
+    contrib = (ye * gate_tbl[..., None].astype(ye.dtype)
+               ).reshape(b, e * cap, d).astype(jnp.float32)
+    y = jax.vmap(lambda t_, c_: jnp.zeros((s + 1, d), jnp.float32)
+                 .at[t_].add(c_))(table.reshape(b, e * cap), contrib)
+    return y[:, :s].astype(x.dtype)
+
+
+def aux_load_balance_loss(params: Params, cfg: MoEConfig,
+                          x: jax.Array) -> jax.Array:
+    """Switch-style load balance loss: E * sum_e f_e * p_e."""
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = (xt @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_e = jnp.argmax(gates, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top_e, cfg.n_experts, dtype=jnp.float32),
+                    axis=0)
+    prob = jnp.mean(gates, axis=0)
+    return cfg.n_experts * jnp.sum(frac * prob)

@@ -1,0 +1,222 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060).
+
+The selective state space  h_t = a_t h_{t-1} + dt_t B_t x_t^T,
+y_t = C_t h_t + D x_t  is evaluated with the *chunked SSD* algorithm:
+within a chunk of Q tokens the quadratic "attention-like" form is used
+(dual form, matmul-friendly -> MXU), across chunks the linear state
+recurrence is carried by ``lax.scan``.  A naive per-token recurrence
+oracle (``ssd_reference``) validates it, and the Pallas kernel in
+``repro.kernels.ssd_scan`` is its TPU twin.
+
+Shapes: x [B,S,H,P] (H heads of headdim P), dt [B,S,H], B/C [B,S,N]
+(single group shared across heads), state h [B,H,P,N].
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+
+# ----------------------------------------------------------------------
+# Core SSD math
+# ----------------------------------------------------------------------
+def ssd_reference(x, dt, A, B, C, h0=None):
+    """Naive per-token recurrence (oracle).  x:[b,s,h,p] dt:[b,s,h]
+    A:[h] B,C:[b,s,n] -> y:[b,s,h,p], h_final:[b,h,p,n]."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, Bt, Ct = inp
+        a = jnp.exp(dtt.astype(jnp.float32) * A)            # [b,h]
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dtt.astype(jnp.float32),
+                         Bt.astype(jnp.float32), xt.astype(jnp.float32))
+        hnew = a[..., None, None] * hprev + dBx
+        y = jnp.einsum("bn,bhpn->bhp", Ct.astype(jnp.float32), hnew)
+        return hnew, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    hf, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hf
+
+
+def ssd_chunked(x, dt, A, B, C, h0=None, chunk: int = 256):
+    """Chunked SSD (the paper's efficient dual form)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // q
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, q, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, q, n).astype(jnp.float32)
+
+    la = dtc * A                                   # log a_t  [b,nc,q,h]
+    cum = jnp.cumsum(la, axis=2)                   # [b,nc,q,h]
+
+    def chunk_step(hprev, inp):
+        xq, dtq, Bq, Cq, laq, cumq = inp
+        # intra-chunk dual (quadratic) term; mask the *exponent* (not the
+        # product) so the upper triangle never produces inf -> NaN grads
+        mask = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+        diff = cumq[:, :, None, :] - cumq[:, None, :, :]            # [b,i,j,h]
+        decay = jnp.exp(jnp.where(mask, diff, -1e30))
+        scores = jnp.einsum("bin,bjn->bij", Cq, Bq)[..., None] * decay
+        y_intra = jnp.einsum("bijh,bjh,bjhp->bihp", scores, dtq,
+                             xq.astype(jnp.float32))
+        # contribution of the inbound state
+        state_decay = jnp.exp(cumq)                               # [b,q,h]
+        y_inter = jnp.einsum("bin,bih,bhpn->bihp", Cq, state_decay, hprev)
+        # outbound state
+        tail = jnp.exp(cumq[:, -1:, :] - cumq)                    # [b,q,h]
+        dBx = jnp.einsum("bjh,bjn,bjhp->bhpn", tail * dtq, Bq,
+                         xq.astype(jnp.float32))
+        hnew = jnp.exp(cumq[:, -1, :])[..., None, None] * hprev + dBx
+        return hnew, y_intra + y_inter
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(Bc, 1, 0), jnp.moveaxis(Cc, 1, 0),
+          jnp.moveaxis(la, 1, 0), jnp.moveaxis(cum, 1, 0))
+    hf, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * q, h, p)[:, :s]
+    return y, hf
+
+
+# ----------------------------------------------------------------------
+# Mamba2 block
+# ----------------------------------------------------------------------
+def mamba2_init(key: jax.Array, cfg: SSMConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    proj_out = 2 * di + 2 * cfg.d_state + h
+    return {
+        "in_proj": dense_init(ks[0], d, proj_out),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width,
+                                             cfg.conv_channels)) * 0.1
+                   ).astype(jnp.float32),
+        "conv_b": jnp.zeros((cfg.conv_channels,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": {"scale": jnp.zeros((di,), jnp.float32)},
+        "out_proj": dense_init(ks[2], di, d),
+    }
+
+
+def _split_proj(cfg: SSMConfig, proj: jax.Array):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + cfg.conv_channels]
+    dt = proj[..., di + cfg.conv_channels:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Depthwise causal conv along S. xbc: [B,S,C]; w: [W,C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(width):
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) * w[i]
+    return jax.nn.silu(out + bias).astype(xbc.dtype)
+
+
+def mamba2_apply(params: Params, cfg: SSMConfig, x: jax.Array,
+                 h0=None, conv0=None, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x: [B,S,D]."""
+    b, s, d = x.shape
+    di, n, h, p = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di].reshape(b, s, h, p)
+    B = xbc[..., di:di + n]
+    C = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, hf = ssd_chunked(xs, dt, A, B, C, h0=h0, chunk=cfg.chunk)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm"]["scale"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    if return_state:
+        conv_tail = None
+        if cfg.conv_width > 1:
+            # last (W-1) pre-conv inputs for decode continuation
+            proj_tail = proj[:, -(cfg.conv_width - 1):, :]
+            _, xbc_tail, _ = _split_proj(cfg, proj_tail)
+            conv_tail = xbc_tail
+        return out, (hf, conv_tail)
+    return out
+
+
+def mamba2_decode(params: Params, cfg: SSMConfig, x: jax.Array,
+                  state: tuple[jax.Array, jax.Array]):
+    """Single-token decode.  x: [B,1,D]; state = (h [b,h,p,n],
+    conv_buf [b,W-1,C])."""
+    b = x.shape[0]
+    di, n, h, p, w = (cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim,
+                      cfg.conv_width)
+    hprev, conv_buf = state
+    proj = x @ params["in_proj"].astype(x.dtype)
+    z, xbc_new, dt_raw = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv_buf.astype(x.dtype), xbc_new], axis=1)
+    acc = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     params["conv_w"])
+    xbc = jax.nn.silu(acc + params["conv_b"])[:, None, :].astype(x.dtype)
+    xt = xbc[..., :di].reshape(b, 1, h, p)[:, 0]
+    B = xbc[..., di:di + n][:, 0]
+    C = xbc[..., di + n:][:, 0]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)[:, 0] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                         # [b,h]
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt, B.astype(jnp.float32),
+                     xt.astype(jnp.float32))
+    hnew = a[..., None, None] * hprev + dBx
+    y = jnp.einsum("bn,bhpn->bhp", C.astype(jnp.float32), hnew)
+    y = y + params["D"][None, :, None] * xt.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, params["norm"]["scale"])
+    out = y @ params["out_proj"].astype(x.dtype)
+    conv_buf = window[:, 1:, :]
+    return out, (hnew, conv_buf)

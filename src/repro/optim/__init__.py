@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, cosine_lr, global_norm, init, update
+
+__all__ = ["AdamWConfig", "init", "update", "cosine_lr", "global_norm"]

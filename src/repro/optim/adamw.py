@@ -1,0 +1,100 @@
+"""AdamW with global-norm clipping, decoupled weight decay and
+configurable moment dtypes (bf16 moments for the >=100B 'lean' presets
+so optimizer state fits HBM — see DESIGN.md §4).
+
+Functional: ``init -> state``, ``update(grads, state, params) ->
+(new_params, new_state, stats)``.  The state pytree mirrors the param
+pytree, so the launcher shards it with the same PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import DTypePolicy, Params
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params: Params, policy: DTypePolicy | None = None) -> Params:
+    policy = policy or DTypePolicy.standard()
+    zeros = lambda p: jnp.zeros_like(p, dtype=policy.moments)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def _decayable(path: tuple) -> bool:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    # no decay on norms / biases / 1-D tensors handled via rank at call site
+    return not any(n in ("scale", "bias", "A_log", "D", "dt_bias")
+                   for n in names)
+
+
+def update(grads: Params, state: Params, params: Params,
+           cfg: AdamWConfig, policy: DTypePolicy | None = None
+           ) -> tuple[Params, Params, dict]:
+    policy = policy or DTypePolicy.standard()
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / c1
+        vhat = v32 / c2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decayable(path) and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(policy.moments), v32.astype(policy.moments)
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,127 @@
+"""Property tests: every AMM design must be semantically identical to an
+ideal multiport RAM under arbitrary op sequences (the paper's core
+correctness claim for algorithmic multi-porting), with the XOR parity
+path agreeing with the direct path at every step."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.amm import AMM_KINDS, AMMSpec, make_amm
+
+DEPTH = 32
+
+SPECS = [
+    AMMSpec("ideal", 2, 2, DEPTH),
+    AMMSpec("h_ntx_rd", 2, 1, DEPTH),
+    AMMSpec("h_ntx_rd", 4, 1, DEPTH),
+    AMMSpec("b_ntx_wr", 1, 2, DEPTH),
+    AMMSpec("hb_ntx", 2, 2, DEPTH),
+    AMMSpec("hb_ntx", 4, 2, DEPTH),
+    AMMSpec("lvt", 2, 2, DEPTH),
+    AMMSpec("lvt", 4, 3, DEPTH),
+    AMMSpec("remap", 2, 2, DEPTH),
+    AMMSpec("remap", 2, 4, DEPTH),
+]
+
+
+def ops_strategy(spec: AMMSpec, n_steps: int = 12):
+    step = st.tuples(
+        st.lists(st.integers(0, DEPTH - 1), min_size=spec.n_read,
+                 max_size=spec.n_read),
+        st.lists(st.tuples(st.integers(0, DEPTH - 1),
+                           st.integers(0, 2**32 - 1), st.booleans()),
+                 min_size=spec.n_write, max_size=spec.n_write),
+    )
+    return st.lists(step, min_size=1, max_size=n_steps)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_amm_matches_ram_oracle(spec):
+    rng = np.random.default_rng(hash(spec.describe()) % 2**31)
+    init = rng.integers(0, 2**32, DEPTH, dtype=np.uint32)
+    sim = make_amm(spec, jnp.asarray(init))
+    state = sim.state
+    oracle = init.copy()
+    for t in range(25):
+        ra = rng.integers(0, DEPTH, spec.n_read).astype(np.int32)
+        wa = rng.integers(0, DEPTH, spec.n_write).astype(np.int32)
+        wv = rng.integers(0, 2**32, spec.n_write, dtype=np.uint32)
+        wm = rng.integers(0, 2, spec.n_write).astype(bool)
+        state, vals = sim.step(state, jnp.asarray(ra), jnp.asarray(wa),
+                               jnp.asarray(wv), jnp.asarray(wm))
+        np.testing.assert_array_equal(np.asarray(vals), oracle[ra])
+        for p in range(spec.n_write):
+            if wm[p]:
+                oracle[wa[p]] = wv[p]
+        np.testing.assert_array_equal(np.asarray(sim.peek(state)), oracle)
+        a = int(rng.integers(0, DEPTH))
+        assert int(sim.read(state, jnp.int32(a))) == int(oracle[a])
+        assert int(sim.read_parity(state, jnp.int32(a))) == int(oracle[a])
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_hb_ntx_hypothesis(data):
+    spec = AMMSpec("hb_ntx", 4, 2, DEPTH)
+    ops = data.draw(ops_strategy(spec))
+    sim = make_amm(spec)
+    state = sim.state
+    oracle = np.zeros(DEPTH, np.uint32)
+    for reads, writes in ops:
+        ra = jnp.asarray(reads, jnp.int32)
+        wa = jnp.asarray([w[0] for w in writes], jnp.int32)
+        wv = jnp.asarray([w[1] for w in writes], jnp.uint32)
+        wm = jnp.asarray([w[2] for w in writes])
+        state, vals = sim.step(state, ra, wa, wv, wm)
+        np.testing.assert_array_equal(np.asarray(vals), oracle[np.asarray(reads)])
+        for a, v, m in writes:
+            if m:
+                oracle[a] = v
+    np.testing.assert_array_equal(np.asarray(sim.peek(state)), oracle)
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_lvt_hypothesis(data):
+    spec = AMMSpec("lvt", 2, 3, DEPTH)
+    ops = data.draw(ops_strategy(spec))
+    sim = make_amm(spec)
+    state = sim.state
+    oracle = np.zeros(DEPTH, np.uint32)
+    for reads, writes in ops:
+        state, vals = sim.step(
+            state, jnp.asarray(reads, jnp.int32),
+            jnp.asarray([w[0] for w in writes], jnp.int32),
+            jnp.asarray([w[1] for w in writes], jnp.uint32),
+            jnp.asarray([w[2] for w in writes]))
+        np.testing.assert_array_equal(np.asarray(vals),
+                                      oracle[np.asarray(reads)])
+        for a, v, m in writes:
+            if m:
+                oracle[a] = v
+    np.testing.assert_array_equal(np.asarray(sim.peek(state)), oracle)
+
+
+def test_spec_formulas():
+    s = AMMSpec("h_ntx_rd", 4, 1, 64)
+    assert s.leaf_banks() == (9, 16)            # 3^2 leaves, depth N/4
+    assert s.storage_bits() == 9 * 16 * 32      # (3/2)^2 overhead
+    s = AMMSpec("hb_ntx", 2, 2, 64)
+    assert s.leaf_banks() == (9, 16)
+    assert AMMSpec("lvt", 3, 2, 64).leaf_banks() == (6, 64)
+    assert AMMSpec("remap", 1, 3, 64).leaf_banks() == (4, 64)
+    assert AMMSpec("lvt", 2, 4, 64).table_bits() == 64 * 2
+    assert AMMSpec("multipump", 2, 2, 64).frequency_factor == 0.5
+    assert AMMSpec("hb_ntx", 4, 2, 64).conflict_free
+    assert not AMMSpec("banked", 2, 2, 64, n_banks=4).conflict_free
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        AMMSpec("h_ntx_rd", 3, 1, 64)           # non-pow2 reads
+    with pytest.raises(ValueError):
+        AMMSpec("b_ntx_wr", 1, 3, 64)           # B gives exactly 2W
+    with pytest.raises(ValueError):
+        AMMSpec("h_ntx_rd", 2, 1, 63)           # depth not divisible

@@ -1,0 +1,95 @@
+"""Benchmark implementations vs references + trace sanity."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bench import (BENCHMARKS, aes, fft_strided, gemm_ncubed, kmp,
+                              md_knn, sort_merge, stencil2d)
+from repro.core.locality import trace_locality
+
+
+def test_fft_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(128) + 1j * rng.standard_normal(128)
+    got = np.asarray(fft_strided.spectrum(jnp.asarray(x)))
+    np.testing.assert_allclose(got, np.fft.fft(x), rtol=1e-4, atol=1e-4)
+
+
+def test_aes_fips197_vector():
+    key = np.arange(16, dtype=np.uint8)
+    pt = np.frombuffer(bytes.fromhex("00112233445566778899aabbccddeeff"),
+                       np.uint8)
+    want = bytes.fromhex("69c4e0d86a7b0430d8cdb78070b4c55a")
+    assert aes.encrypt_np(pt[None], key)[0].tobytes() == want
+    assert np.asarray(aes.run_jax(jnp.asarray(pt[None]), key))[0].tobytes() \
+        == want
+
+
+def test_kmp_jax_matches_np():
+    p = kmp.Params(n=1500, seed=3)
+    text = kmp.make_text(p)
+    assert kmp.run_np(text) == int(kmp.run_jax(jnp.asarray(text)))
+    assert kmp.run_np(text) > 0
+
+
+def test_md_knn_forces_finite_and_symmetric_scale():
+    inp = md_knn.make_inputs(md_knn.Params(n_atoms=32))
+    f = md_knn.run_jax(jnp.asarray(inp["position"]),
+                       jnp.asarray(inp["neighbor_list"]))
+    assert bool(jnp.isfinite(f).all())
+    assert f.shape == (32, 3)
+
+
+def test_stencil_matches_manual():
+    inp = stencil2d.make_inputs(stencil2d.TINY)
+    got = np.asarray(stencil2d.run_jax(jnp.asarray(inp["orig"]),
+                                       jnp.asarray(inp["filter"])))
+    o, f = inp["orig"], inp["filter"]
+    r, c = o.shape
+    want = np.zeros((r - 2, c - 2), np.float32)
+    for i in range(r - 2):
+        for j in range(c - 2):
+            want[i, j] = float((o[i:i + 3, j:j + 3] * f).sum())
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_sort_trace_runs_and_jax_sorts():
+    x = sort_merge.make_input(sort_merge.TINY)
+    got = np.asarray(sort_merge.run_jax(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x))
+
+
+def test_gemm():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((8, 8))
+    b = rng.standard_normal((8, 8))
+    np.testing.assert_allclose(
+        np.asarray(gemm_ncubed.run_jax(jnp.asarray(a), jnp.asarray(b))),
+        a @ b, rtol=1e-5)
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+def test_traces_are_wellformed(name):
+    mod = BENCHMARKS[name]
+    tr = mod.gen_trace(mod.TINY)
+    assert tr.n_nodes > 50
+    assert tr.n_mem > 10
+    # topological: every dep references an earlier node
+    assert (tr.pred_idx < np.repeat(
+        np.arange(tr.n_nodes), np.diff(tr.pred_ptr))).all()
+    m = tr.mem_mask()
+    assert (tr.addrs[m] >= 0).all()
+
+
+def test_locality_ordering_matches_paper():
+    """Paper Fig 5: byte-oriented KMP/AES high; FFT/GEMM/MD-KNN low."""
+    L = {}
+    for name in ("kmp", "aes", "fft_strided", "gemm_ncubed", "md_knn"):
+        mod = BENCHMARKS[name]
+        tr = mod.gen_trace(mod.TINY)
+        addrs, aids = tr.mem_addrs_and_arrays()
+        L[name] = trace_locality(addrs, aids)
+    assert L["kmp"] > 0.3 and L["aes"] > 0.3
+    for low in ("fft_strided", "gemm_ncubed", "md_knn"):
+        assert L[low] < 0.3, (low, L[low])
+        assert L[low] < L["kmp"]

@@ -1,0 +1,166 @@
+"""Distributed integration tests — run in a subprocess with 8 fake host
+devices (tests in THIS process must keep seeing 1 device)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, n_devices: int = 8, timeout: int = 420) -> str:
+    """Run a python snippet under a forced device count."""
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+def test_pjit_train_step_matches_single_device():
+    """The sharded train step must be numerically identical (up to fp
+    noise) to the unsharded one — SPMD correctness."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_arch, tiny_variant
+        from repro.configs.base import RuntimeConfig
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.steps import make_train_step
+        from repro.models import DTypePolicy, init_model
+        from repro.optim import adamw
+
+        arch = tiny_variant(get_arch("qwen3-1.7b"), n_layers=2, vocab=128)
+        rt = RuntimeConfig(remat="none")
+        policy = DTypePolicy.standard()
+        params = init_model(jax.random.PRNGKey(0), arch, policy)
+        opt = adamw.init(params, policy)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(rng.integers(0, 127, (8, 32)), jnp.int32),
+                 "labels": jnp.asarray(rng.integers(0, 127, (8, 32)), jnp.int32)}
+        step = make_train_step(arch, rt, policy)
+
+        # single-device reference
+        p1, o1, m1 = jax.jit(step)(params, opt, batch)
+
+        # sharded over (4 data, 2 model)
+        mesh = make_test_mesh((4, 2), ("data", "model"))
+        pps = shd.param_pspecs(jax.eval_shape(lambda: params), mesh)
+        psh = shd.to_named(pps, mesh)
+        osh = shd.to_named({"m": pps, "v": pps,
+                            "step": jax.sharding.PartitionSpec()}, mesh)
+        bsh = shd.to_named(shd.input_pspecs(
+            jax.eval_shape(lambda: batch), mesh, 8), mesh)
+        baxes = shd.batch_axes_for(mesh, 8)
+        with shd.activation_sharding(mesh, baxes, False):
+            p2, o2, m2 = jax.jit(step, in_shardings=(psh, osh, bsh))(
+                params, opt, batch)
+        d = max(float(jnp.abs(a.astype(jnp.float32) -
+                              b.astype(jnp.float32)).max())
+                for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+        print("MAXDIFF", d)
+        print("LOSS", float(m1["loss"]), float(m2["loss"]))
+        assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-2
+        assert d < 5e-2
+    """)
+    assert "MAXDIFF" in out
+
+
+def test_dryrun_mini_mesh_all_families():
+    """Lower+compile one small cell per family on an 8-device mesh."""
+    out = run_sub("""
+        import dataclasses as dc
+        import jax, jax.numpy as jnp
+        from repro.configs import get_arch, tiny_variant
+        from repro.configs.base import SHAPES, RuntimeConfig
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.launch.specs import (abstract_opt_state, abstract_params,
+                                        input_specs, policy_for)
+        from repro.launch.steps import make_train_step
+
+        mesh = make_test_mesh((4, 2), ("data", "model"))
+        for name in ("qwen3-1.7b", "dbrx-132b", "mamba2-130m",
+                     "zamba2-2.7b", "internvl2-1b", "seamless-m4t-medium",
+                     "minicpm3-4b"):
+            arch = tiny_variant(get_arch(name))
+            shape = dc.replace(SHAPES["train_4k"], seq_len=32, global_batch=8)
+            rt = RuntimeConfig(remat="full", accum_steps=2)
+            policy = policy_for(rt)
+            pspec = abstract_params(arch, rt)
+            pps = shd.param_pspecs(pspec, mesh)
+            psh = shd.to_named(pps, mesh)
+            ospec = abstract_opt_state(pspec, rt)
+            osh = shd.to_named({"m": pps, "v": pps,
+                                "step": jax.sharding.PartitionSpec()}, mesh)
+            bspec = input_specs(arch, shape, rt)
+            bsh = shd.to_named(shd.input_pspecs(bspec, mesh, 8), mesh)
+            baxes = shd.batch_axes_for(mesh, 8)
+            with shd.activation_sharding(mesh, baxes, True):
+                step = make_train_step(arch, rt, policy)
+                compiled = jax.jit(step, in_shardings=(psh, osh, bsh)).lower(
+                    pspec, ospec, bspec).compile()
+            print("COMPILED", name)
+    """, timeout=560)
+    assert out.count("COMPILED") == 7
+
+
+def test_elastic_reshard_restore():
+    """Checkpoint saved on an 8-device mesh restores onto a 4-device
+    mesh (elastic scale-down after failure)."""
+    out = run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, tempfile
+        from repro.checkpoint import CheckpointManager
+        from repro.launch import sharding as shd
+        from repro.launch.mesh import make_test_mesh
+        from repro.runtime import elastic_mesh_shape
+
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+                "b": jnp.ones((8,), jnp.float32)}
+        mesh8 = make_test_mesh((4, 2), ("data", "model"))
+        sh8 = shd.to_named(jax.tree.map(
+            lambda x: jax.sharding.PartitionSpec("data", None)
+            if x.ndim == 2 else jax.sharding.PartitionSpec(None), tree), mesh8)
+        tree8 = jax.tree.map(jax.device_put, tree, sh8)
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d)
+            mgr.save(5, tree8)
+            # "lose" half the devices -> new 4-device mesh
+            new = elastic_mesh_shape(4, model_parallel=2)
+            assert new["shape"] == (2, 2)
+            mesh4 = make_test_mesh((2, 2), ("data", "model"))
+            sh4 = shd.to_named(jax.tree.map(
+                lambda x: jax.sharding.PartitionSpec("data", "model")
+                if x.ndim == 2 else jax.sharding.PartitionSpec(None),
+                tree), mesh4)
+            out = mgr.restore(tree, shardings=sh4)
+            np.testing.assert_array_equal(np.asarray(out["w"]),
+                                          np.asarray(tree["w"]))
+            print("RESHARD_OK")
+    """)
+    assert "RESHARD_OK" in out
+
+
+def test_production_mesh_shapes():
+    out = run_sub("""
+        import jax
+        from repro.launch.mesh import make_production_mesh
+        m1 = make_production_mesh()
+        assert dict(m1.shape) == {"data": 16, "model": 16}
+        m2 = make_production_mesh(multi_pod=True)
+        assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+        print("MESH_OK", m1.devices.size, m2.devices.size)
+    """, n_devices=512)
+    assert "MESH_OK 256 512" in out

@@ -1,0 +1,68 @@
+"""Roofline HLO-parser unit tests on synthetic HLO text."""
+from repro.launch.roofline import (HloAnalysis, RooflineReport, analyze_hlo,
+                                   model_flops)
+
+_SYNTH = """\
+HloModule test
+
+%loop_body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+  %p = (s32[], f32[4,8]) parameter(0)
+  %a = f32[4,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} parameter(1)
+  %d = f32[4,8]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[4,8]{1,0} all-reduce(%d), channel_id=1, replica_groups=[2,2]<=[4]
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[4,8]) tuple(%i, %ar)
+}
+
+%loop_cond (q: (s32[], f32[4,8])) -> pred[] {
+  %q = (s32[], f32[4,8]) parameter(0)
+  %j = s32[] get-tuple-element(%q), index=0
+  %n = s32[] constant(3)
+  ROOT %lt = pred[] compare(%j, %n), direction=LT
+}
+
+ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+  %x = f32[4,8]{1,0} parameter(0)
+  %init = (s32[], f32[4,8]) tuple(%x, %x)
+  %wh = (s32[], f32[4,8]) while(%init), condition=%loop_cond, body=%loop_body, backend_config={"known_trip_count":{"n":"3"},"known_init_step":{"init":"0","step":"1"}}
+  %ag = f32[8,8]{1,0} all-gather(%x), channel_id=2, replica_groups=[2,2]<=[4]
+  ROOT %out = f32[4,8]{1,0} get-tuple-element(%wh), index=1
+}
+"""
+
+
+def test_trip_count_multiplies_loop_body():
+    r = analyze_hlo(_SYNTH, f32_as_bf16=False)
+    # dot: 2 * (4*8) * 8 = 512 flops, x3 trips
+    assert r["flops"] == 3 * 512
+    # all-reduce payload 4*8*4B = 128B x ring factor 2 x 3 trips,
+    # plus the one-shot all-gather 8*8*4 = 256B x 1
+    assert r["collectives"]["all-reduce"] == 3 * 2 * 128
+    assert r["collectives"]["all-gather"] == 256
+
+
+def test_f32_as_bf16_halves_payloads():
+    r = analyze_hlo(_SYNTH, f32_as_bf16=True)
+    assert r["collectives"]["all-reduce"] == 3 * 2 * 64
+
+
+def test_report_terms_and_dominant():
+    rep = RooflineReport(
+        arch="a", shape="s", mesh="m", chips=256,
+        flops_per_device=197e12,          # exactly 1 s of compute
+        hbm_bytes_per_device=819e9 / 2,   # 0.5 s memory
+        collective_bytes_per_device=50e9 * 2,  # 2 s collective
+        collectives={}, model_flops_global=197e12 * 256 * 0.5)
+    assert abs(rep.compute_s - 1.0) < 1e-9
+    assert rep.dominant == "collective"
+    assert abs(rep.step_s - 2.0) < 1e-9
+    assert abs(rep.mfu - 0.25) < 1e-9
+    assert abs(rep.useful_flops_ratio - 0.5) < 1e-9
+
+
+def test_model_flops():
+    assert model_flops(1e9, 1000, "train") == 6e12
+    assert model_flops(1e9, 128, "decode") == 2 * 1e9 * 128
+    assert model_flops(10e9, 128, "decode", active_params=int(3e9)) \
+        == 2 * 3e9 * 128

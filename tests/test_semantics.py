@@ -1,0 +1,97 @@
+"""Deeper semantic oracles: MoE vs dense-mixture reference, hybrid
+sequential decode vs full forward, planner/data integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_arch, tiny_variant
+from repro.configs.base import RuntimeConfig
+from repro.models import decode_step, forward, init_model, make_cache
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+RT = RuntimeConfig(remat="none")
+
+
+def test_moe_matches_dense_mixture_oracle():
+    """With capacity >= S*K/E guaranteed (cf large), no token drops —
+    the capacity-dispatch output must equal the naive dense mixture."""
+    cfg = MoEConfig(d_model=16, d_ff_expert=32, n_experts=4, top_k=2,
+                    capacity_factor=4.0, act="silu", gated=True)
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 8, 16)), jnp.float32)
+
+    got = moe_apply(params, cfg, x)
+
+    # oracle: run every expert densely, combine with renormalized top-k
+    logits = (x @ params["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, cfg.top_k)
+    top_g = top_g / top_g.sum(-1, keepdims=True)
+    outs = []
+    for e in range(cfg.n_experts):
+        up = x @ params["w_up"][e]
+        up = jax.nn.silu(x @ params["w_gate"][e]) * up
+        outs.append(up @ params["w_down"][e])
+    dense = jnp.stack(outs, axis=-2)                     # [B,S,E,D]
+    want = jnp.zeros_like(x)
+    for k in range(cfg.top_k):
+        sel = jnp.take_along_axis(
+            dense, top_e[..., k][..., None, None], axis=-2)[..., 0, :]
+        want = want + top_g[..., k][..., None] * sel
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_hybrid_sequential_decode_matches_forward():
+    """zamba2 (mamba + shared attn): decoding token-by-token from an
+    empty cache must reproduce the full forward's final logits."""
+    arch = tiny_variant(get_arch("zamba2-2.7b"))
+    params = init_model(jax.random.PRNGKey(0), arch)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(1, arch.vocab - 1, (2, 6)), jnp.int32)
+
+    logits_full, _ = forward(params, arch, {"tokens": toks}, RT)
+
+    cache = make_cache(arch, 8, 2)
+    step = jax.jit(lambda p, c, t: decode_step(p, arch, c, t, RT))
+    for i in range(6):
+        logits_d, cache = step(params, cache, toks[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(logits_full[:, -1]),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_encdec_sequential_decode_matches_forward():
+    """seamless (enc-dec): prefill + decode must agree with forward."""
+    from repro.models import prefill
+    arch = tiny_variant(get_arch("seamless-m4t-medium"))
+    params = init_model(jax.random.PRNGKey(0), arch)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(1, arch.vocab - 1, (2, 8)), jnp.int32)
+    frames = jnp.asarray(rng.standard_normal((2, 8, arch.d_model)),
+                         jnp.float32)
+    batch = {"tokens": toks, "frames": frames}
+    logits_full, _ = forward(params, arch, batch, RT)
+    _, cache = prefill(params, arch,
+                       {"tokens": toks[:, :7], "frames": frames}, 12, RT)
+    logits_d, _ = decode_step(params, arch, cache, toks[:, 7:8], RT)
+    np.testing.assert_allclose(np.asarray(logits_d[:, 0]),
+                               np.asarray(logits_full[:, 7]),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_zipf_alpha_drives_planner_locality():
+    """The data pipeline's skew knob feeds the planner: heavier zipf
+    (more repeated hot tokens) lowers spatial locality of the embedding
+    stream — the paper's trace->design coupling, end to end."""
+    from repro.core.locality import spatial_locality_np
+    from repro.memory.planner import embedding_stream
+    arch = get_arch("qwen3-1.7b")
+    flat = embedding_stream(arch, n=4096, zipf_alpha=1.01)
+    hot = embedding_stream(arch, n=4096, zipf_alpha=2.5)
+    l_flat = spatial_locality_np(flat)
+    l_hot = spatial_locality_np(hot)
+    # both are low-locality gather streams; the hot one revisits a few
+    # rows (temporal, not spatial) and both stay below the AMM threshold
+    assert l_flat < 0.3 and l_hot < 0.3

@@ -1,0 +1,188 @@
+"""Scheduler, cost-model, locality and DSE invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.bench import BENCHMARKS
+from repro.core.cost import memory_cost, sram_macro
+from repro.core.dse import (DesignPoint, evaluate_point, pareto_front,
+                            performance_ratio, sweep)
+from repro.core.locality import (spatial_locality_jax, spatial_locality_np,
+                                 trace_locality)
+from repro.core.sim import (LOAD, STORE, ScheduleConfig, Trace, TraceBuilder,
+                            schedule)
+
+
+# ----------------------------------------------------------------------
+# locality
+# ----------------------------------------------------------------------
+def test_locality_stride_one_is_high():
+    addrs = np.arange(1000)          # byte stride 1
+    assert spatial_locality_np(addrs) > 0.99
+
+
+def test_locality_stride8_is_eighth():
+    addrs = np.arange(0, 8000, 8)
+    assert abs(spatial_locality_np(addrs) - 1 / 8) < 1e-6
+
+
+def test_locality_random_is_low():
+    rng = np.random.default_rng(0)
+    addrs = rng.integers(0, 1 << 20, 4000)
+    assert spatial_locality_np(addrs) < 0.05
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=2, max_size=200))
+def test_locality_np_equals_jax(addrs):
+    import jax.numpy as jnp
+    a = np.asarray(addrs, np.int64)
+    np_val = spatial_locality_np(a)
+    jx_val = float(spatial_locality_jax(jnp.asarray(a)))
+    assert abs(np_val - jx_val) < 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=2, max_size=200))
+def test_locality_bounded(addrs):
+    v = spatial_locality_np(np.asarray(addrs))
+    assert 0.0 <= v <= 1.0 + 1e-9
+
+
+# ----------------------------------------------------------------------
+# cost model
+# ----------------------------------------------------------------------
+def test_sram_monotone_in_size():
+    small = sram_macro(1024, 32)
+    big = sram_macro(16384, 32)
+    assert big.area_mm2 > small.area_mm2
+    assert big.access_ns > small.access_ns
+    assert big.energy_rd_pj > small.energy_rd_pj
+
+
+def test_no_eda_support_beyond_two_ports():
+    """Paper section I: no memory-compiler support for >2 ports."""
+    with pytest.raises(ValueError):
+        sram_macro(1024, 32, ports=4)
+
+
+def test_amm_costs_scale_with_ports():
+    base = memory_cost(AMMSpec("h_ntx_rd", 2, 1, 1024))
+    more = memory_cost(AMMSpec("h_ntx_rd", 4, 1, 1024))
+    assert more.area_mm2 > base.area_mm2
+
+
+def test_multipump_frequency_penalty():
+    mp = memory_cost(AMMSpec("multipump", 2, 2, 1024))
+    bk = memory_cost(AMMSpec("banked", 4, 4, 1024, n_banks=2))
+    assert mp.max_freq_ghz < bk.max_freq_ghz
+
+
+def test_table_designs_pay_table_area():
+    lvt = memory_cost(AMMSpec("lvt", 2, 2, 1024))
+    ideal = memory_cost(AMMSpec("ideal", 2, 2, 1024))
+    assert lvt.area_mm2 > 0 and ideal.area_mm2 > 0
+
+
+# ----------------------------------------------------------------------
+# scheduler
+# ----------------------------------------------------------------------
+def _mem_trace(n_ops: int, n_arrays: int = 1, stride: int = 1) -> Trace:
+    tb = TraceBuilder("t")
+    arrs = [tb.declare_array(f"a{i}", 4) for i in range(n_arrays)]
+    for i in range(n_ops):
+        tb.load(arrs[i % n_arrays], (i * stride) % 256)
+    return tb.build()
+
+
+def test_ports_bound_throughput():
+    """n independent loads through an rR port config need >= n/r cycles."""
+    tr = _mem_trace(64)
+    for r in (1, 2, 4):
+        cfg = ScheduleConfig(
+            mem={0: AMMSpec("lvt", r, 1, 256)},
+            fu_counts={"iadd": 8}, mem_latency=1)
+        res = schedule(tr, cfg)
+        assert res.cycles >= math.ceil(64 / r)
+        assert res.cycles <= math.ceil(64 / r) + 4
+
+
+def test_amm_never_slower_than_banked_same_ports():
+    """Conflict-freedom: AMM rR cycles <= banked with r total ports on a
+    pathological stride (all accesses to one bank)."""
+    tr = _mem_trace(64, stride=8)      # stride 8 words, 8 banks -> 1 bank hit
+    amm = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("lvt", 4, 1, 256)}, fu_counts={}))
+    banked = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("banked", 4, 4, 256, n_banks=8)},
+        fu_counts={}, ports_per_bank=1))
+    assert amm.cycles <= banked.cycles
+    assert banked.bank_conflict_stalls > 0
+
+
+def test_dependencies_respected():
+    tb = TraceBuilder("chain")
+    a = tb.declare_array("a", 4)
+    prev = tb.load(a, 0)
+    for i in range(1, 20):
+        prev = tb.load(a, i, (prev,))
+    tr = tb.build()
+    res = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("lvt", 8, 8, 64)}, fu_counts={}, mem_latency=2))
+    assert res.cycles >= 20 * 2          # serial chain: latency x depth
+
+
+def test_scheduler_deterministic():
+    mod = BENCHMARKS["md_knn"]
+    tr = mod.gen_trace(mod.TINY)
+    cfg = ScheduleConfig(mem={a: AMMSpec("banked", 8, 8, 4096, n_banks=4)
+                              for a in tr.array_names},
+                         fu_counts={"fadd": 2, "fmul": 2, "fdiv": 1,
+                                    "iadd": 2, "imul": 1, "icmp": 2,
+                                    "logic": 2})
+    r1, r2 = schedule(tr, cfg), schedule(tr, cfg)
+    assert r1.cycles == r2.cycles == schedule(tr, cfg).cycles
+
+
+# ----------------------------------------------------------------------
+# DSE
+# ----------------------------------------------------------------------
+def test_pareto_front_nondominated():
+    mod = BENCHMARKS["gemm_ncubed"]
+    pts = sweep(mod.gen_trace(mod.TINY),
+                [DesignPoint("banked", n_banks=4),
+                 DesignPoint("hb_ntx", 4, 2)], unrolls=(1, 4))
+    front = pareto_front(pts)
+    for i, p in enumerate(front):
+        for q in front:
+            assert not (q.time_us < p.time_us and q.area_mm2 < p.area_mm2)
+
+
+def test_unroll_speeds_up_compute_bound():
+    mod = BENCHMARKS["stencil2d"]
+    tr = mod.gen_trace(mod.TINY)
+    p1 = evaluate_point(tr, DesignPoint("lvt", 4, 2), 1)
+    p8 = evaluate_point(tr, DesignPoint("lvt", 4, 2), 8)
+    assert p8.cycles < p1.cycles
+    assert p8.area_mm2 > p1.area_mm2
+
+
+def test_paper_locality_correlation():
+    """The paper's headline claim (IV-C): AMM performance ratio is higher
+    for low-locality benchmarks than for the stride-one benchmark KMP."""
+    designs = [DesignPoint("banked", n_banks=2),
+               DesignPoint("banked", n_banks=8),
+               DesignPoint("banked", n_banks=32),
+               DesignPoint("hb_ntx", 4, 2), DesignPoint("lvt", 4, 2),
+               DesignPoint("lvt", 8, 2)]
+    ratios = {}
+    for name in ("kmp", "md_knn", "gemm_ncubed"):
+        mod = BENCHMARKS[name]
+        pts = sweep(mod.gen_trace(mod.TINY), designs, unrolls=(2, 8))
+        ratios[name] = performance_ratio(pts)
+    assert ratios["md_knn"] > ratios["kmp"] or \
+        ratios["gemm_ncubed"] > ratios["kmp"], ratios

@@ -1,0 +1,94 @@
+"""Perf-iteration probe: print the largest trip-weighted collectives and
+dots of a dry-run cell's compiled HLO (the §Perf 'profile').
+
+  PYTHONPATH=src python tools/probe_collectives.py <arch> <shape> [--multi-pod]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re  # noqa: E402
+import sys  # noqa: E402
+
+import repro.launch.dryrun as dr  # noqa: E402
+import repro.launch.roofline as rl  # noqa: E402
+
+
+def comp_weights(ana):
+    weights = {ana.entry: 1.0}
+    order = [ana.entry]
+    seen = {ana.entry}
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        c = ana.comps.get(name)
+        if not c:
+            continue
+        for kind, callee, mult in c.calls:
+            weights[callee] = weights.get(callee, 0) + weights[name] * mult
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+        for grp in c.branch_groups:
+            for g in grp:
+                weights[g] = weights.get(g, 0) + weights[name]
+                if g not in seen:
+                    seen.add(g)
+                    order.append(g)
+    return weights
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    multi = "--multi-pod" in sys.argv
+    captured = {}
+    orig = rl.analyze_hlo
+
+    def cap(hlo):
+        captured["hlo"] = hlo
+        return orig(hlo)
+
+    dr.analyze_hlo = cap
+    prof = "opt" if "--opt" in sys.argv else "baseline"
+    dr.run_cell(arch, shape, multi, verbose=False, profile=prof)
+    hlo = captured["hlo"]
+    ana = rl.HloAnalysis(hlo)
+    weights = comp_weights(ana)
+
+    rows, dots = [], []
+    cur = None
+    for raw in hlo.splitlines():
+        h = rl._HEADER_RE.match(raw)
+        if h and not raw.startswith(" "):
+            cur = h.group("name")
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = re.search(r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(?:-start)?\(", raw)
+        if m and "-done" not in raw:
+            b = rl._shape_list_bytes(m.group(1))
+            w = weights.get(cur, 0)
+            rows.append((b * w, b, w, m.group(2), raw.strip()[:150]))
+        md = re.search(r"=\s*(.*?)\s*dot\(", raw)
+        if md:
+            b = rl._shape_list_bytes(md.group(1))
+            dots.append((b * weights.get(cur, 0), raw.strip()[:150]))
+
+    rows.sort(reverse=True)
+    dots.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"\n==== {arch} x {shape} collectives: "
+          f"{total/2**30:.1f} GiB total, {len(rows)} sites ====")
+    for r in rows[:14]:
+        print(f"{r[0]/2**30:9.2f}GiB raw={r[1]/2**20:8.1f}MiB x{r[2]:6.0f} "
+              f"{r[3]:16s} {r[4][:110]}")
+    print("---- largest dots (result bytes x trips) ----")
+    for d in dots[:6]:
+        print(f"{d[0]/2**30:9.2f}GiB  {d[1][:130]}")
+
+
+if __name__ == "__main__":
+    main()
