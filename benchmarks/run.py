@@ -8,19 +8,25 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   lm_smoke_bench    — tiny-arch train/decode step wall times (CPU)
 
 Full-size runs: ``python -m benchmarks.run --full`` (minutes).
+DSE tables run on the parallel sweep runner; control worker processes
+with ``--jobs N`` and enable the incremental on-disk result cache with
+``--cache-dir DIR``.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
 import numpy as np
 
-FULL = "--full" in sys.argv
+# set by main() from argparse; module-level so the table functions and
+# ad-hoc imports (e.g. REPL use) see consistent defaults
+FULL = False
 ONLY = None
-for i, a in enumerate(sys.argv):
-    if a == "--only":
-        ONLY = sys.argv[i + 1]
+JOBS = os.cpu_count() or 1
+CACHE_DIR = None
 
 
 def _t(fn, *args, repeat=3, **kw):
@@ -38,17 +44,18 @@ def _row(name: str, us: float, derived: str = "") -> None:
 # ======================================================================
 def fig4_dse() -> None:
     """Paper Fig 4: design-space exploration per benchmark."""
-    from repro.core.bench import BENCHMARKS, PAPER_FIG4
+    from repro.core.bench import PAPER_FIG4, get_trace
     from repro.core.dse import (DEFAULT_DESIGNS, design_space_expansion,
-                                pareto_front, sweep)
+                                pareto_front, run_sweep)
+    from repro.core.sim import prepare_trace
 
     unrolls = (1, 2, 4, 8) if FULL else (2, 8)
     designs = DEFAULT_DESIGNS if FULL else DEFAULT_DESIGNS[::2]
     for name in PAPER_FIG4:
-        mod = BENCHMARKS[name]
-        tr = mod.gen_trace(mod.Params() if FULL else mod.TINY)
+        tr = get_trace(name, full=FULL)
         t0 = time.perf_counter()
-        pts = sweep(tr, designs, unrolls)
+        pts = run_sweep(prepare_trace(tr), designs, unrolls,
+                        jobs=JOBS, cache_dir=CACHE_DIR)
         dt = (time.perf_counter() - t0) * 1e6
         banking = [p for p in pts if not p.is_amm]
         amm = [p for p in pts if p.is_amm]
@@ -65,19 +72,20 @@ def fig4_dse() -> None:
 
 def fig5_locality() -> None:
     """Paper Fig 5: locality + performance ratio across the suite."""
-    from repro.core.bench import BENCHMARKS
-    from repro.core.dse import DEFAULT_DESIGNS, performance_ratio, sweep
-    from repro.core.locality import trace_locality
+    from repro.core.bench import BENCHMARKS, get_trace
+    from repro.core.dse import DEFAULT_DESIGNS, performance_ratio, run_sweep
+    from repro.core.sim import prepare_trace
 
     unrolls = (1, 2, 4, 8) if FULL else (2, 8)
     designs = DEFAULT_DESIGNS if FULL else DEFAULT_DESIGNS[::2]
     out = []
-    for name, mod in sorted(BENCHMARKS.items()):
-        tr = mod.gen_trace(mod.Params() if FULL else mod.TINY)
-        addrs, aids = tr.mem_addrs_and_arrays()
+    for name in sorted(BENCHMARKS):
+        tr = get_trace(name, full=FULL)
         t0 = time.perf_counter()
-        L = trace_locality(addrs, aids)
-        ratio = performance_ratio(sweep(tr, designs, unrolls))
+        pt = prepare_trace(tr)
+        L = pt.locality
+        ratio = performance_ratio(run_sweep(pt, designs, unrolls,
+                                            jobs=JOBS, cache_dir=CACHE_DIR))
         dt = (time.perf_counter() - t0) * 1e6
         out.append((L, ratio, name, dt))
         _row(f"fig5_locality.{name}", dt,
@@ -226,7 +234,23 @@ TABLES = {
 }
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global FULL, ONLY, JOBS, CACHE_DIR
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description="Paper table/figure benchmark harness (CSV to stdout).")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size traces/archs (minutes)")
+    ap.add_argument("--only", choices=sorted(TABLES), default=None,
+                    help="run a single table")
+    ap.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
+                    help="worker processes for DSE sweeps (1 = serial)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="on-disk DSE result cache for incremental re-runs")
+    args = ap.parse_args(argv)
+    FULL, ONLY, JOBS, CACHE_DIR = (args.full, args.only, args.jobs,
+                                   args.cache_dir)
+
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():
         if ONLY and name != ONLY:

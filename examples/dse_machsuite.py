@@ -1,31 +1,35 @@
 """Scenario: full paper-style design-space exploration on one benchmark.
 
 Reproduces the Fig-4 flow for a chosen MachSuite benchmark: sweep
-banking factors x AMM designs x unroll, print the (time, area, power)
-points, both Pareto fronts, the design-space expansion, and the Fig-5
-performance ratio.
+banking factors x AMM designs x unroll on the parallel sweep runner,
+print the (time, area, power) points, both Pareto fronts, the
+design-space expansion, and the Fig-5 performance ratio.
 
 Run:  PYTHONPATH=src python examples/dse_machsuite.py [bench] [--full]
+          [--jobs N] [--cache-dir DIR]
 """
-import sys
+import argparse
+import os
 
-from repro.core.bench import BENCHMARKS
+from repro.core.bench import BENCHMARKS, get_trace
 from repro.core.dse import (DEFAULT_DESIGNS, design_space_expansion,
-                            pareto_front, performance_ratio, sweep)
-from repro.core.locality import trace_locality
+                            pareto_front, performance_ratio, run_sweep)
+from repro.core.sim import prepare_trace
 
-bench = sys.argv[1] if len(sys.argv) > 1 and not sys.argv[1].startswith("-") \
-    else "gemm_ncubed"
-full = "--full" in sys.argv
-mod = BENCHMARKS[bench]
-params = mod.Params() if full else mod.TINY
+ap = argparse.ArgumentParser(description=__doc__)
+ap.add_argument("bench", nargs="?", default="gemm_ncubed",
+                choices=sorted(BENCHMARKS))
+ap.add_argument("--full", action="store_true")
+ap.add_argument("--jobs", type=int, default=os.cpu_count() or 1)
+ap.add_argument("--cache-dir", default=None)
+args = ap.parse_args()
 
-tr = mod.gen_trace(params)
-addrs, aids = tr.mem_addrs_and_arrays()
-print(f"benchmark={bench}  nodes={tr.n_nodes}  mem_ops={tr.n_mem}  "
-      f"L_spatial={trace_locality(addrs, aids):.3f}\n")
+pt = prepare_trace(get_trace(args.bench, full=args.full))
+print(f"benchmark={args.bench}  nodes={pt.n_nodes}  "
+      f"mem_ops={pt.trace.n_mem}  L_spatial={pt.locality:.3f}\n")
 
-pts = sweep(tr, DEFAULT_DESIGNS, unrolls=(1, 2, 4, 8))
+pts = run_sweep(pt, DEFAULT_DESIGNS, unrolls=(1, 2, 4, 8),
+                jobs=args.jobs, cache_dir=args.cache_dir)
 print(f"{'design':16s} {'unroll':6s} {'cycles':>8s} {'time_us':>9s} "
       f"{'area_mm2':>9s} {'power_mW':>9s} {'stalls':>8s}")
 for p in sorted(pts, key=lambda p: p.time_us):

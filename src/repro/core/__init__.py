@@ -7,7 +7,7 @@
 - ``repro.core.locality`` — Weinberg spatial-locality metric
 - ``repro.core.dse``      — design-space sweep, Pareto, performance ratio
 """
-from repro.core.amm import AMM_KINDS, AMMSpec, make_amm
+from repro.core.amm.spec import AMM_KINDS, AMMSpec
 from repro.core.locality import (spatial_locality_jax, spatial_locality_np,
                                  trace_locality)
 
@@ -15,3 +15,12 @@ __all__ = [
     "AMMSpec", "AMM_KINDS", "make_amm",
     "spatial_locality_np", "spatial_locality_jax", "trace_locality",
 ]
+
+
+def __getattr__(name: str):
+    # make_amm pulls the JAX-backed AMM state machines; resolve lazily so
+    # the numpy-only scheduler/DSE stack never pays the jax import.
+    if name == "make_amm":
+        from repro.core.amm import sim
+        return sim.make_amm
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,35 @@
+"""Deferred module imports for heavy optional dependencies.
+
+The Pre-RTL DSE path (trace generation → scheduler → cost models) is
+pure numpy; only the functional JAX implementations (``run_jax``, AMM
+state machines, Pallas kernels) need jax.  Importing jax eagerly adds
+~1s to every CLI invocation, so modules that need it only on some paths
+bind ``jnp = lazy_import("jax.numpy")`` instead: the real import happens
+on first attribute access.
+"""
+from __future__ import annotations
+
+import importlib
+
+
+class _LazyModule:
+    __slots__ = ("_name", "_mod")
+
+    def __init__(self, name: str) -> None:
+        self._name = name
+        self._mod = None
+
+    def __getattr__(self, attr: str):
+        mod = self._mod
+        if mod is None:
+            mod = self._mod = importlib.import_module(self._name)
+        return getattr(mod, attr)
+
+    def __repr__(self) -> str:
+        state = "loaded" if self._mod is not None else "deferred"
+        return f"<lazy module {self._name!r} ({state})>"
+
+
+def lazy_import(name: str) -> _LazyModule:
+    """Return a proxy that imports ``name`` on first attribute access."""
+    return _LazyModule(name)

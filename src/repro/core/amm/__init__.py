@@ -10,54 +10,27 @@ pure-JAX state machine with a uniform interface:
     vp = sim.read_parity(sim.state, addr)  # XOR-reconstruction path
 
 All payloads are uint32 words.
+
+:class:`AMMSpec` and its structural formulas are pure numpy/stdlib; the
+JAX-backed simulators live in ``repro.core.amm.sim`` and are imported
+lazily on first ``make_amm``/``AMMSim`` access, so the scheduler / cost
+/ DSE stack does not pay the jax import.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.amm import banked as _banked
-from repro.core.amm import lvt as _lvt
-from repro.core.amm import ntx as _ntx
 from repro.core.amm.spec import AMM_KINDS, AMMSpec
 
 __all__ = ["AMMSpec", "AMM_KINDS", "AMMSim", "make_amm"]
 
-
-@dataclasses.dataclass
-class AMMSim:
-    spec: AMMSpec
-    state: Any
-    read: Callable
-    read_parity: Callable
-    step: Callable
-    peek: Callable
+_LAZY = ("AMMSim", "make_amm")
 
 
-def make_amm(spec: AMMSpec, values: jax.Array | None = None) -> AMMSim:
-    if values is None:
-        values = jnp.zeros((spec.depth,), jnp.uint32)
-    values = jnp.asarray(values, jnp.uint32)
-    if values.shape != (spec.depth,):
-        raise ValueError(f"init values must be [{spec.depth}]")
+def __getattr__(name: str):
+    if name in _LAZY:
+        from repro.core.amm import sim
+        return getattr(sim, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
-    if spec.kind in ("h_ntx_rd", "b_ntx_wr", "hb_ntx"):
-        state, fns = _ntx.make_ntx(spec, values)
-        return AMMSim(spec, state, fns["read"], fns["read_parity"],
-                      fns["step"], fns["peek"])
-    if spec.kind == "lvt":
-        state = _lvt.lvt_init(spec, values)
-        return AMMSim(spec, state, _lvt.lvt_read, _lvt.lvt_read,
-                      _lvt.lvt_step, _lvt.lvt_peek)
-    if spec.kind == "remap":
-        state = _lvt.remap_init(spec, values)
-        return AMMSim(spec, state, _lvt.remap_read, _lvt.remap_read,
-                      _lvt.remap_step, _lvt.remap_peek)
-    if spec.kind in ("ideal", "banked", "multipump"):
-        state = _banked.ideal_init(spec, values)
-        return AMMSim(spec, state, _banked.ideal_read, _banked.ideal_read,
-                      _banked.ideal_step, _banked.ideal_peek)
-    raise ValueError(f"unknown design kind: {spec.kind}")
+
+def __dir__() -> list:
+    return sorted(set(globals()) | set(_LAZY))

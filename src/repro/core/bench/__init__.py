@@ -4,22 +4,149 @@ Each module provides: ``Params`` (+ ``TINY``), ``gen_trace(params)`` and
 a runnable JAX implementation.  The four discussion benchmarks of the
 paper (Fig 4) are fft_strided, gemm_ncubed, kmp, md_knn; sort_merge,
 stencil2d and aes widen the locality spread for the Fig-5 analysis.
+
+``get_trace`` is the preferred entry point: trace generation is pure in
+the benchmark parameters, so generated traces are memoized at module
+level and every consumer (DSE runner, benchmark harness, examples,
+tests) shares one trace object — and therefore one memoized
+:class:`~repro.core.sim.prepared.PreparedTrace` analysis.
 """
 from __future__ import annotations
 
-from repro.core.bench import (aes, fft_strided, gemm_ncubed, kmp, md_knn,
-                              sort_merge, stencil2d)
+import dataclasses
+import hashlib
+import importlib
+import os
+from collections.abc import Mapping
 
-BENCHMARKS = {
-    "fft_strided": fft_strided,
-    "gemm_ncubed": gemm_ncubed,
-    "kmp": kmp,
-    "md_knn": md_knn,
-    "sort_merge": sort_merge,
-    "stencil2d": stencil2d,
-    "aes": aes,
-}
+_BENCH_NAMES = ("fft_strided", "gemm_ncubed", "kmp", "md_knn",
+                "sort_merge", "stencil2d", "aes")
+
+
+class _LazyRegistry(Mapping):
+    """name -> benchmark module, imported on first access.
+
+    Some benchmark modules build sizeable module-level tables (e.g. the
+    AES S-box); loading them lazily keeps ``--only fig4_dse``-style CLI
+    runs from paying for benchmarks they never touch.
+    """
+
+    def __getitem__(self, name: str):
+        if name not in _BENCH_NAMES:
+            raise KeyError(name)
+        return importlib.import_module(f"repro.core.bench.{name}")
+
+    def __iter__(self):
+        return iter(_BENCH_NAMES)
+
+    def __len__(self) -> int:
+        return len(_BENCH_NAMES)
+
+
+BENCHMARKS = _LazyRegistry()
 
 PAPER_FIG4 = ("fft_strided", "gemm_ncubed", "kmp", "md_knn")
 
-__all__ = ["BENCHMARKS", "PAPER_FIG4"]
+_TRACE_MEMO: dict = {}
+
+
+_TRACE_CACHE_VERSION = 1
+_SRC_HASH_MEMO: dict = {}
+
+
+def _module_src_hash(mod) -> str:
+    """Content hash of the benchmark module's source file, so edits to a
+    ``gen_trace`` automatically invalidate its on-disk trace cache."""
+    path = getattr(mod, "__file__", None)
+    if path not in _SRC_HASH_MEMO:
+        try:
+            with open(path, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()[:16]
+        except (OSError, TypeError):
+            digest = "nosrc"
+        _SRC_HASH_MEMO[path] = digest
+    return _SRC_HASH_MEMO[path]
+
+
+def _disk_cache_path(name: str, params, mod) -> "str | None":
+    """Trace generation is pure in (benchmark, params); cache the built
+    arrays on disk next to the compiled cycle loop so repeat CLI runs
+    skip the Python trace-builder loops entirely.  The key includes the
+    generator module's source hash: stale traces are never reused."""
+    if os.environ.get("REPRO_NO_TRACE_CACHE"):
+        return None
+    root = os.environ.get("REPRO_CACHE_DIR") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro")
+    key = hashlib.sha256(
+        repr((_TRACE_CACHE_VERSION, _module_src_hash(mod), name,
+              dataclasses.astuple(params))).encode()).hexdigest()[:24]
+    return os.path.join(root, "traces", f"{name}-{key}.npz")
+
+
+def _trace_from_disk(path: str):
+    import json
+
+    import numpy as np
+
+    from repro.core.sim.trace import Trace
+
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            return Trace(
+                kinds=z["kinds"], array_ids=z["array_ids"], addrs=z["addrs"],
+                pred_ptr=z["pred_ptr"], pred_idx=z["pred_idx"],
+                array_names={int(k): v for k, v in meta["array_names"].items()},
+                word_bytes={int(k): int(v)
+                            for k, v in meta["word_bytes"].items()},
+                name=meta["name"])
+    except Exception:
+        return None
+
+
+def _trace_to_disk(path: str, tr) -> None:
+    import json
+
+    import numpy as np
+
+    try:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        meta = json.dumps({"name": tr.name, "array_names": tr.array_names,
+                           "word_bytes": tr.word_bytes})
+        with open(tmp, "wb") as f:
+            np.savez(f, kinds=tr.kinds, array_ids=tr.array_ids,
+                     addrs=tr.addrs, pred_ptr=tr.pred_ptr,
+                     pred_idx=tr.pred_idx, meta=np.asarray(meta))
+        os.replace(tmp, path)
+    except Exception:
+        pass
+
+
+def get_trace(name: str, params=None, *, full: bool = False):
+    """Memoized ``BENCHMARKS[name].gen_trace(params)``.
+
+    ``params`` defaults to the module's full-size ``Params()`` when
+    ``full`` else ``TINY``.  Traces are cached per (benchmark, params) —
+    in memory for the process lifetime and on disk under
+    ``$REPRO_CACHE_DIR`` (``~/.cache/repro``) across runs — so every
+    consumer shares one trace object and its prepared-trace analysis.
+    """
+    mod = BENCHMARKS[name]
+    if params is None:
+        params = mod.Params() if full else mod.TINY
+    key = (name, dataclasses.astuple(params))
+    tr = _TRACE_MEMO.get(key)
+    if tr is None:
+        path = _disk_cache_path(name, params, mod)
+        if path is not None and os.path.exists(path):
+            tr = _trace_from_disk(path)
+        if tr is None:
+            tr = mod.gen_trace(params)
+            if path is not None:
+                _trace_to_disk(path, tr)
+        _TRACE_MEMO[key] = tr
+    return _TRACE_MEMO[key]
+
+
+__all__ = ["BENCHMARKS", "PAPER_FIG4", "get_trace"]

@@ -8,8 +8,10 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax
-import jax.numpy as jnp
+from repro.core._lazy import lazy_import
+
+jax = lazy_import("jax")
+jnp = lazy_import("jax.numpy")
 import numpy as np
 
 from repro.core.sim import trace as T

@@ -6,7 +6,9 @@ from __future__ import annotations
 
 import dataclasses
 
-import jax.numpy as jnp
+from repro.core._lazy import lazy_import
+
+jnp = lazy_import("jax.numpy")
 import numpy as np
 
 from repro.core.sim import trace as T

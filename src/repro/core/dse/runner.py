@@ -1,0 +1,344 @@
+"""Sweep runner: parallel, cached DSE point evaluation.
+
+The paper's Fig-4/5 loop evaluates one trace under O(64) accelerator
+compositions.  This module is the execution engine for that loop:
+
+* **Shared analysis** — the trace is prepared once
+  (:class:`repro.core.sim.prepared.PreparedTrace`); each design point
+  pays only for the port-constrained cycle loop.
+* **Parallelism** — points are chunked into work units and evaluated on
+  a ``concurrent.futures.ProcessPoolExecutor``; each worker prepares the
+  trace once per process and then drains chunks.
+* **Incremental re-sweeps** — an on-disk result cache keyed by
+  ``(trace fingerprint, design, unroll, mem_latency, cache version)``
+  makes re-runs and ``--full`` extensions of a previous sweep pay only
+  for the new points.
+
+Results are deterministic: the returned list is always ordered
+``designs``-major / ``unrolls``-minor and each point is bitwise
+identical whether it came from the serial path, a worker process, or
+the cache.
+
+CLI::
+
+    python -m repro.core.dse.runner --bench gemm_ncubed --jobs 8
+    python -m repro.core.dse.runner --bench md_knn --full \
+        --cache-dir .dse_cache --unrolls 1,2,4,8
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import time
+from typing import TYPE_CHECKING, Iterable, Sequence
+
+if TYPE_CHECKING:   # deferred at runtime: keeps CLI startup light
+    import json
+    from concurrent.futures import ProcessPoolExecutor
+    from pathlib import Path
+
+from repro.core.sim import trace as T
+from repro.core.sim.prepared import PreparedTrace, prepare_trace
+from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
+                                  DesignPoint, DSEPoint, evaluate_point)
+
+# Bump when DSEPoint fields or the evaluation semantics change: stale
+# cache entries from older layouts must miss, not deserialize garbage.
+CACHE_VERSION = 1
+
+_ENV_CACHE_DIR = "REPRO_DSE_CACHE"
+
+# Minimum estimated work (uncached points x trace nodes) before fanning
+# out to worker processes: below this, chunk pickling + pool latency
+# outweigh the 2nd core.  Module-level so tests can patch it.
+_MIN_PARALLEL_WORK = 300_000
+
+
+# ----------------------------------------------------------------------
+# cache
+# ----------------------------------------------------------------------
+def point_key(fingerprint: str, dp: DesignPoint, unroll: int,
+              mem_latency: int) -> str:
+    """Stable cache key for one (trace, design, unroll, latency) point."""
+    import json
+
+    payload = json.dumps(
+        {"v": CACHE_VERSION, "trace": fingerprint,
+         "design": dataclasses.asdict(dp), "unroll": unroll,
+         "mem_latency": mem_latency},
+        sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+class SweepCache:
+    """One-JSON-file-per-point result cache under ``root``.
+
+    Writes are atomic (tmp file + rename) so concurrent workers and
+    interrupted sweeps never leave a torn entry behind.
+    """
+
+    def __init__(self, root: "str | Path") -> None:
+        from pathlib import Path
+
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> "Path":
+        return self.root / f"{key[:2]}" / f"{key}.json"
+
+    def get(self, key: str) -> "DSEPoint | None":
+        import json
+
+        p = self._path(key)
+        try:
+            with open(p) as f:
+                d = json.load(f)
+            pt = DSEPoint(**d)
+            self.hits += 1
+            return pt
+        except (OSError, ValueError, TypeError):
+            self.misses += 1
+            return None
+
+    def put(self, key: str, point: DSEPoint) -> None:
+        import json
+
+        p = self._path(key)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_suffix(f".tmp.{os.getpid()}")
+        with open(tmp, "w") as f:
+            json.dump(dataclasses.asdict(point), f)
+        os.replace(tmp, p)
+
+
+def _resolve_cache(cache_dir: "str | Path | None") -> "SweepCache | None":
+    if cache_dir is None:
+        cache_dir = os.environ.get(_ENV_CACHE_DIR) or None
+    return SweepCache(cache_dir) if cache_dir else None
+
+
+# ----------------------------------------------------------------------
+# parallel workers
+# ----------------------------------------------------------------------
+# Worker processes memoize prepared traces by fingerprint, so a sweep
+# costs one trace unpickle + prepare per (worker, trace) and the pool
+# can be reused across sweeps over different traces.  Small traces ride
+# along with each chunk (cheap, lets the pool persist across sweeps);
+# traces above _LARGE_TRACE_NODES get a dedicated pool whose initializer
+# ships the trace exactly once per worker instead of once per chunk.
+_WORKER_MEMO: dict[str, PreparedTrace] = {}
+_WORKER_MEMO_MAX = 8
+_LARGE_TRACE_NODES = 50_000
+
+# One long-lived pool per process, sized on first use; recreated only if
+# a later sweep asks for more workers.
+_POOL: "ProcessPoolExecutor | None" = None
+_POOL_WORKERS = 0
+
+
+def _worker_memoize(fingerprint: str, tr: T.Trace) -> PreparedTrace:
+    while len(_WORKER_MEMO) >= _WORKER_MEMO_MAX:
+        _WORKER_MEMO.pop(next(iter(_WORKER_MEMO)))
+    pt = _WORKER_MEMO[fingerprint] = prepare_trace(tr)
+    return pt
+
+
+def _worker_init(fingerprint: str, tr: T.Trace) -> None:
+    _worker_memoize(fingerprint, tr)
+
+
+def _worker_eval_chunk(
+    fingerprint: str, tr: "T.Trace | None",
+    chunk: "list[tuple[int, DesignPoint, int]]", mem_latency: int,
+) -> "list[tuple[int, DSEPoint]]":
+    pt = _WORKER_MEMO.get(fingerprint)
+    if pt is None:
+        assert tr is not None, "large-trace pool must be pre-initialized"
+        pt = _worker_memoize(fingerprint, tr)
+    return [(i, evaluate_point(pt, dp, u, mem_latency))
+            for i, dp, u in chunk]
+
+
+def _bare_trace(tr: T.Trace) -> T.Trace:
+    """Copy without the memoized PreparedTrace so worker pickles stay small."""
+    return dataclasses.replace(tr)
+
+
+def _get_pool(jobs: int) -> "ProcessPoolExecutor":
+    from concurrent.futures import ProcessPoolExecutor
+
+    global _POOL, _POOL_WORKERS
+    if _POOL is None or _POOL_WORKERS < jobs:
+        if _POOL is not None:
+            _POOL.shutdown(wait=False)
+        _POOL = ProcessPoolExecutor(max_workers=jobs)
+        _POOL_WORKERS = jobs
+    return _POOL
+
+
+def shutdown_pool() -> None:
+    """Tear down the shared worker pool (tests / atexit hygiene)."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None:
+        _POOL.shutdown(wait=True)
+        _POOL = None
+        _POOL_WORKERS = 0
+
+
+def _chunked(tasks: list, n_chunks: int) -> list[list]:
+    size = max(1, (len(tasks) + n_chunks - 1) // n_chunks)
+    return [tasks[i:i + size] for i in range(0, len(tasks), size)]
+
+
+# ----------------------------------------------------------------------
+# entry point
+# ----------------------------------------------------------------------
+def run_sweep(
+    tr: "T.Trace | PreparedTrace",
+    designs: Sequence[DesignPoint] = DEFAULT_DESIGNS,
+    unrolls: Iterable[int] = DEFAULT_UNROLLS,
+    *,
+    mem_latency: int = 2,
+    jobs: "int | None" = None,
+    cache_dir: "str | Path | None" = None,
+    cache: "SweepCache | None" = None,
+) -> list[DSEPoint]:
+    """Evaluate every ``(design, unroll)`` composition on one trace.
+
+    Args:
+      tr: trace (raw or prepared) to sweep.
+      designs / unrolls: the composition grid; results are returned in
+        ``designs``-major, ``unrolls``-minor order.
+      mem_latency: load issue-to-data latency forwarded to the scheduler.
+      jobs: worker processes.  ``None``/``0``/``1`` evaluates serially
+        in-process; ``>1`` uses a shared process pool with chunked work
+        units — but only once the estimated work clears
+        ``_MIN_PARALLEL_WORK``, so tiny sweeps stay serial and fast.
+      cache_dir: directory for the on-disk result cache (defaults to the
+        ``REPRO_DSE_CACHE`` env var; no caching when unset).
+      cache: pre-constructed :class:`SweepCache` (overrides cache_dir).
+    """
+    unrolls = tuple(unrolls)
+    pt = prepare_trace(tr)
+    if cache is None:
+        cache = _resolve_cache(cache_dir)
+
+    tasks: list[tuple[int, DesignPoint, int]] = []
+    results: list["DSEPoint | None"] = []
+    keys: list["str | None"] = []
+    for dp in designs:
+        for u in unrolls:
+            idx = len(results)
+            key = (point_key(pt.fingerprint, dp, u, mem_latency)
+                   if cache else None)
+            hit = cache.get(key) if cache else None
+            results.append(hit)
+            keys.append(key)
+            if hit is None:
+                tasks.append((idx, dp, u))
+
+    n_jobs = jobs or 0
+    if (n_jobs > 1 and len(tasks) > 1
+            and len(tasks) * pt.n_nodes >= _MIN_PARALLEL_WORK):
+        n_jobs = min(n_jobs, len(tasks))
+        chunks = _chunked(tasks, n_jobs * 2)
+        bare = _bare_trace(pt.trace)
+        if pt.n_nodes >= _LARGE_TRACE_NODES:
+            # ship the trace once per worker via the pool initializer
+            from concurrent.futures import ProcessPoolExecutor
+
+            with ProcessPoolExecutor(
+                    max_workers=n_jobs, initializer=_worker_init,
+                    initargs=(pt.fingerprint, bare)) as pool:
+                futs = [pool.submit(_worker_eval_chunk, pt.fingerprint,
+                                    None, c, mem_latency) for c in chunks]
+                for fut in futs:
+                    for idx, point in fut.result():
+                        results[idx] = point
+        else:
+            pool = _get_pool(n_jobs)
+            futs = [pool.submit(_worker_eval_chunk, pt.fingerprint, bare,
+                                c, mem_latency) for c in chunks]
+            for fut in futs:
+                for idx, point in fut.result():
+                    results[idx] = point
+    else:
+        for idx, dp, u in tasks:
+            results[idx] = evaluate_point(pt, dp, u, mem_latency)
+
+    if cache:
+        for idx, _, _ in tasks:
+            cache.put(keys[idx], results[idx])
+
+    assert all(p is not None for p in results)
+    return results  # type: ignore[return-value]
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+def _parse_unrolls(text: str) -> tuple[int, ...]:
+    return tuple(int(x) for x in text.split(",") if x)
+
+
+def main(argv: "Sequence[str] | None" = None) -> None:
+    import argparse
+
+    from repro.core.bench import BENCHMARKS, get_trace
+    from repro.core.dse.pareto import design_space_expansion, pareto_front
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.dse.runner",
+        description="Parallel, cached DSE sweep over one MachSuite trace.")
+    ap.add_argument("--bench", required=True, choices=sorted(BENCHMARKS),
+                    help="benchmark trace to sweep")
+    ap.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
+                    help="worker processes (1 = serial; default: #cpus)")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size trace instead of TINY")
+    ap.add_argument("--unrolls", type=_parse_unrolls,
+                    default=DEFAULT_UNROLLS, metavar="1,2,4,8",
+                    help="comma-separated unroll factors")
+    ap.add_argument("--mem-latency", type=int, default=2)
+    ap.add_argument("--cache-dir", default=None,
+                    help=f"on-disk result cache (or ${_ENV_CACHE_DIR})")
+    args = ap.parse_args(argv)
+
+    tr = get_trace(args.bench, full=args.full)
+    t0 = time.perf_counter()
+    pt = prepare_trace(tr)
+    t_prep = time.perf_counter() - t0
+
+    cache = _resolve_cache(args.cache_dir)
+    t0 = time.perf_counter()
+    pts = run_sweep(pt, DEFAULT_DESIGNS, args.unrolls,
+                    mem_latency=args.mem_latency, jobs=args.jobs,
+                    cache=cache)
+    t_sweep = time.perf_counter() - t0
+
+    print("bench,design,unroll,cycles,time_us,area_mm2,power_mw,"
+          "bank_conflict_stalls,avg_mem_parallelism")
+    for p in pts:
+        print(f"{p.bench},{p.design},{p.unroll},{p.cycles},"
+              f"{p.time_us:.4f},{p.area_mm2:.5f},{p.power_mw:.2f},"
+              f"{p.bank_conflict_stalls},{p.avg_mem_parallelism:.3f}")
+
+    banking = [p for p in pts if not p.is_amm]
+    amm = [p for p in pts if p.is_amm]
+    print(f"# nodes={pt.n_nodes} locality={pt.locality:.3f} "
+          f"points={len(pts)} prep={t_prep*1e3:.1f}ms "
+          f"sweep={t_sweep*1e3:.1f}ms jobs={args.jobs}")
+    if banking and amm:
+        print(f"# expansion={design_space_expansion(banking, amm):.2f} "
+              f"pareto_banked={len(pareto_front(banking))} "
+              f"pareto_amm={len(pareto_front(amm))}")
+    if cache:
+        print(f"# cache: dir={cache.root} hits={cache.hits} "
+              f"misses={cache.misses}")
+
+
+if __name__ == "__main__":
+    main()

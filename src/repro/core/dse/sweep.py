@@ -7,19 +7,23 @@ One :class:`DSEPoint` = one accelerator composition: a memory design
 applied per array (banked partitioning or an AMM port config) x a loop
 unroll factor (scaling functional units).  Cycles come from the
 port-constrained scheduler; time/area/power from the cost models.
+
+``evaluate_point``/``sweep`` accept a raw :class:`Trace` or a
+:class:`PreparedTrace`; per-trace analysis (successor CSR, heights,
+array depths, access counts) is computed once and shared across every
+design point.  ``sweep`` delegates to ``repro.core.dse.runner`` for
+parallel evaluation and on-disk result caching.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterable, Sequence
-
-import numpy as np
 
 from repro.core.amm.spec import AMMSpec
 from repro.core.cost import (FU_AREA_MM2, FU_LEAK_MW, FU_POWER_MW,
                              memory_cost)
 from repro.core.sim import trace as T
+from repro.core.sim.prepared import PreparedTrace, prepare_trace
 from repro.core.sim.scheduler import ScheduleConfig, schedule
 
 # base FU mix at unroll=1 (Aladdin constructs multi-issue ALUs by unrolling)
@@ -87,18 +91,9 @@ class DSEPoint:
         return dataclasses.asdict(self)
 
 
-def _array_depths(tr: T.Trace) -> dict[int, int]:
+def _array_depths(tr: "T.Trace | PreparedTrace") -> dict[int, int]:
     """Power-of-two depth per array from the trace's max word index."""
-    depths: dict[int, int] = {}
-    m = tr.mem_mask()
-    for aid in tr.array_names:
-        sel = (tr.array_ids == aid) & m
-        if not sel.any():
-            depths[aid] = 16
-            continue
-        max_idx = int(tr.addrs[sel].max()) // tr.word_bytes[aid]
-        depths[aid] = max(16, 1 << (max_idx + 1).bit_length())
-    return depths
+    return prepare_trace(tr).array_depths
 
 
 def _spec_for(dp: DesignPoint, depth: int, width_bits: int) -> AMMSpec:
@@ -111,22 +106,24 @@ def _spec_for(dp: DesignPoint, depth: int, width_bits: int) -> AMMSpec:
 
 
 def evaluate_point(
-    tr: T.Trace,
+    tr: "T.Trace | PreparedTrace",
     dp: DesignPoint,
     unroll: int,
     mem_latency: int = 2,
 ) -> DSEPoint:
-    depths = _array_depths(tr)
+    pt = prepare_trace(tr)
+    trace = pt.trace
+    depths = pt.array_depths
     specs = {
-        aid: _spec_for(dp, depths[aid], tr.word_bytes[aid] * 8)
-        for aid in tr.array_names
+        aid: _spec_for(dp, depths[aid], trace.word_bytes[aid] * 8)
+        for aid in trace.array_names
     }
     cfg = ScheduleConfig(
         mem=specs,
         fu_counts={k: v * unroll for k, v in _BASE_FU.items()},
         mem_latency=mem_latency,
     )
-    res = schedule(tr, cfg)
+    res = schedule(pt, cfg)
 
     costs = {aid: memory_cost(s) for aid, s in specs.items()}
     cycle_ns = max([_MIN_CYCLE_NS] + [c.cycle_ns for c in costs.values()])
@@ -135,14 +132,12 @@ def evaluate_point(
     area = sum(c.area_mm2 for c in costs.values())
     area += sum(FU_AREA_MM2[k] * v * unroll for k, v in _BASE_FU.items())
 
-    # dynamic memory energy
-    m = tr.mem_mask()
+    # dynamic memory energy (per-array access counts precomputed on the
+    # prepared trace)
     e_pj = 0.0
-    for aid in tr.array_names:
-        sel = (tr.array_ids == aid) & m
-        loads = int(np.sum(sel & (tr.kinds == T.LOAD)))
-        stores = int(np.sum(sel & (tr.kinds == T.STORE)))
-        e_pj += loads * costs[aid].read_energy_pj + stores * costs[aid].write_energy_pj
+    for aid in trace.array_names:
+        e_pj += (pt.loads_per_array[aid] * costs[aid].read_energy_pj
+                 + pt.stores_per_array[aid] * costs[aid].write_energy_pj)
     p_mem_dyn = e_pj / max(time_us, 1e-9) * 1e-3          # pJ/us -> mW
     p_leak = sum(c.leakage_mw for c in costs.values())
     # FU power at achieved utilization
@@ -152,7 +147,7 @@ def evaluate_point(
                for k, v in _BASE_FU.items())
 
     return DSEPoint(
-        bench=tr.name,
+        bench=trace.name,
         design=dp.label,
         is_amm=dp.is_amm,
         unroll=unroll,
@@ -167,12 +162,21 @@ def evaluate_point(
 
 
 def sweep(
-    tr: T.Trace,
+    tr: "T.Trace | PreparedTrace",
     designs: Sequence[DesignPoint] = DEFAULT_DESIGNS,
     unrolls: Iterable[int] = DEFAULT_UNROLLS,
+    *,
+    mem_latency: int = 2,
+    jobs: int | None = None,
+    cache_dir: "str | None" = None,
 ) -> list[DSEPoint]:
-    points = []
-    for dp in designs:
-        for u in unrolls:
-            points.append(evaluate_point(tr, dp, u))
-    return points
+    """Evaluate ``designs x unrolls`` on one trace.
+
+    Thin wrapper over :func:`repro.core.dse.runner.run_sweep`: pass
+    ``jobs`` for multi-process evaluation and ``cache_dir`` for the
+    on-disk result cache.  Point order is always ``designs``-major,
+    ``unrolls``-minor, independent of parallelism or cache hits.
+    """
+    from repro.core.dse.runner import run_sweep
+    return run_sweep(tr, designs, unrolls, mem_latency=mem_latency,
+                     jobs=jobs, cache_dir=cache_dir)

@@ -18,9 +18,12 @@ Both a numpy and a JAX implementation are provided; they agree exactly
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+
+from repro.core._lazy import lazy_import
+
+jax = lazy_import("jax")
+jnp = lazy_import("jax.numpy")
 
 
 def spatial_locality_np(addrs_bytes: np.ndarray) -> float:
@@ -40,13 +43,23 @@ def spatial_locality_np(addrs_bytes: np.ndarray) -> float:
     return float(total / (a.size - 1))
 
 
-@jax.jit
-def spatial_locality_jax(addrs_bytes: jax.Array) -> jax.Array:
-    a = addrs_bytes.astype(jnp.int64)
-    strides = jnp.abs(jnp.diff(a))
-    contrib = jnp.where(strides > 0, 1.0 / jnp.maximum(strides, 1), 0.0)
-    n = jnp.maximum(a.shape[0] - 1, 1)
-    return jnp.sum(contrib) / n
+_SPATIAL_JAX_JIT = None
+
+
+def spatial_locality_jax(addrs_bytes) -> "jax.Array":
+    """JAX twin of :func:`spatial_locality_np` (jit-compiled on first use,
+    so importing this module does not pull in jax)."""
+    global _SPATIAL_JAX_JIT
+    if _SPATIAL_JAX_JIT is None:
+        @jax.jit
+        def _impl(a):
+            a = a.astype(jnp.int64)
+            strides = jnp.abs(jnp.diff(a))
+            contrib = jnp.where(strides > 0, 1.0 / jnp.maximum(strides, 1), 0.0)
+            n = jnp.maximum(a.shape[0] - 1, 1)
+            return jnp.sum(contrib) / n
+        _SPATIAL_JAX_JIT = _impl
+    return _SPATIAL_JAX_JIT(addrs_bytes)
 
 
 def per_array_locality(addrs_bytes: np.ndarray, array_ids: np.ndarray,

@@ -1,8 +1,11 @@
+from repro.core.sim.prepared import (PreparedTrace, prepare_trace,
+                                     trace_fingerprint)
 from repro.core.sim.scheduler import ScheduleConfig, ScheduleResult, schedule
 from repro.core.sim.trace import (FADD, FDIV, FMUL, IADD, ICMP, IMUL, LOAD,
                                   LOGIC, STORE, Trace, TraceBuilder)
 
 __all__ = [
     "Trace", "TraceBuilder", "schedule", "ScheduleConfig", "ScheduleResult",
+    "PreparedTrace", "prepare_trace", "trace_fingerprint",
     "LOAD", "STORE", "FADD", "FMUL", "FDIV", "IADD", "IMUL", "ICMP", "LOGIC",
 ]

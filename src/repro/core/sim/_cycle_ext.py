@@ -1,0 +1,85 @@
+"""On-demand compiled cycle loop (ctypes wrapper for _cycle_loop.c).
+
+``load()`` compiles ``_cycle_loop.c`` with the system C compiler into a
+shared object cached under ``$REPRO_CACHE_DIR`` (default
+``~/.cache/repro``), keyed by source hash + machine, and returns the
+bound ctypes function.  Any failure (no compiler, sandboxed FS, …)
+returns ``None`` and the scheduler falls back to the pure-Python cycle
+loop — results are identical either way (golden regression tests pin
+both paths).
+
+Set ``REPRO_PURE_PY=1`` to force the Python loop.
+"""
+from __future__ import annotations
+
+import os
+
+_SRC = os.path.join(os.path.dirname(__file__), "_cycle_loop.c")
+_FN = None
+_ANALYZE = None
+_TRIED = False
+
+
+def _cache_dir() -> str:
+    root = os.environ.get("REPRO_CACHE_DIR")
+    if root:
+        return root
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro")
+
+
+def load():
+    """Return the compiled ``run_schedule`` or ``None`` if unavailable."""
+    global _FN, _ANALYZE, _TRIED
+    if _TRIED:
+        return _FN
+    _TRIED = True
+    if os.environ.get("REPRO_PURE_PY"):
+        return None
+    try:
+        import ctypes
+        import hashlib
+        import platform
+
+        with open(_SRC, "rb") as f:
+            src = f.read()
+        key = hashlib.sha256(src).hexdigest()[:16]
+        cache = _cache_dir()
+        os.makedirs(cache, exist_ok=True)
+        so = os.path.join(cache, f"cycle_loop-{key}-{platform.machine()}.so")
+        if not os.path.exists(so):
+            import subprocess
+
+            tmp = f"{so}.{os.getpid()}.tmp.so"
+            cc = os.environ.get("CC", "cc")
+            subprocess.run(
+                [cc, "-O2", "-shared", "-fPIC", "-o", tmp, _SRC],
+                check=True, capture_output=True, timeout=120)
+            os.replace(tmp, so)
+        i64 = ctypes.c_longlong
+        i64p = ctypes.POINTER(i64)
+        u8p = ctypes.POINTER(ctypes.c_ubyte)
+        lib = ctypes.CDLL(so)
+        fn = lib.run_schedule
+        fn.restype = i64
+        fn.argtypes = (
+            [i64, i64, i64]                # n, n_arrays, n_classes
+            + [i64p] * 4                   # succ_ptr, succ_idx, indegree, height
+            + [u8p, i64p, i64p, i64p]      # is_load, node_lat, word_idx, klass_id
+            + [i64p, i64p, i64p]           # fu_budgets, mem_rd, mem_wr
+            + [u8p, i64p, i64p, u8p]       # banked, nbanks, maxfail, configured
+            + [i64, i64, i64, i64p])       # mem_latency, ports_per_bank, max_cycles, out
+        an = lib.analyze_graph
+        an.restype = None
+        an.argtypes = [i64] + [i64p] * 7
+        _FN = fn
+        _ANALYZE = an
+    except Exception:
+        _FN = None
+        _ANALYZE = None
+    return _FN
+
+
+def load_analyze():
+    """Return the compiled ``analyze_graph`` or ``None``."""
+    load()
+    return _ANALYZE

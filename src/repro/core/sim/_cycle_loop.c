@@ -1,0 +1,254 @@
+/* Port-constrained list-scheduler cycle loop (C twin of scheduler._schedule_py).
+ *
+ * Compiled on demand by repro.core.sim._cycle_ext into a cached shared
+ * object and called through ctypes.  The algorithm is a 1:1 port of the
+ * pure-Python cycle loop; every heap holds distinct packed int64 keys,
+ * so pop order — and therefore the whole schedule — is identical to the
+ * Python implementation regardless of internal heap layout.
+ *
+ * Packed encodings (n = number of trace nodes):
+ *   ready heaps:   prio[i]  = -height[i] * n + i        (may be negative)
+ *   inflight heap: finish_cycle * n + node              (non-negative)
+ *
+ * Return codes: 0 ok, -1 max_cycles exceeded, -2 deadlock,
+ * -3 memory op on unconfigured array, -4 allocation failure.
+ */
+#include <stdint.h>
+#include <stdlib.h>
+#include <string.h>
+
+typedef int64_t i64;
+typedef uint8_t u8;
+
+static void heap_push(i64 *h, i64 *sz, i64 v) {
+    i64 i = (*sz)++;
+    while (i > 0) {
+        i64 p = (i - 1) >> 1;
+        if (h[p] <= v) break;
+        h[i] = h[p];
+        i = p;
+    }
+    h[i] = v;
+}
+
+static i64 heap_pop(i64 *h, i64 *sz) {
+    i64 top = h[0];
+    i64 m = --(*sz);
+    if (m > 0) {
+        i64 last = h[m];
+        i64 i = 0;
+        for (;;) {
+            i64 l = 2 * i + 1;
+            if (l >= m) break;
+            i64 r = l + 1;
+            i64 c = (r < m && h[r] < h[l]) ? r : l;
+            if (h[c] >= last) break;
+            h[i] = h[c];
+            i = c;
+        }
+        h[i] = last;
+    }
+    return top;
+}
+
+/* One-pass DDG analysis over the CSR (node ids are topologically
+ * ordered by construction): dependency depth (forward) and
+ * latency-weighted height to sink (backward).  Same recurrences as
+ * prepared.dependency_depths / prepared.schedule_heights. */
+void analyze_graph(
+    i64 n,
+    const i64 *pred_ptr, const i64 *pred_idx,
+    const i64 *succ_ptr, const i64 *succ_idx,
+    const i64 *node_lat,
+    i64 *depth_out, i64 *height_out)
+{
+    for (i64 i = 0; i < n; i++) {
+        i64 d = 0;
+        for (i64 e = pred_ptr[i]; e < pred_ptr[i + 1]; e++) {
+            i64 pd = depth_out[pred_idx[e]] + 1;
+            if (pd > d) d = pd;
+        }
+        depth_out[i] = d;
+    }
+    for (i64 i = n - 1; i >= 0; i--) {
+        i64 lo = succ_ptr[i], hi = succ_ptr[i + 1];
+        if (lo == hi) { height_out[i] = 0; continue; }   /* sink */
+        i64 h = 0;
+        for (i64 e = lo; e < hi; e++) {
+            i64 sh = height_out[succ_idx[e]];
+            if (sh > h) h = sh;
+        }
+        height_out[i] = h + node_lat[i];
+    }
+}
+
+/* Python-style floor modulo for possibly-negative packed priorities. */
+static inline i64 node_of(i64 item, i64 n) {
+    i64 m = item % n;
+    return m < 0 ? m + n : m;
+}
+
+i64 run_schedule(
+    i64 n, i64 n_arrays, i64 n_classes,
+    const i64 *succ_ptr, const i64 *succ_idx,
+    const i64 *indegree, const i64 *height,
+    const u8 *is_load, const i64 *node_lat,
+    const i64 *word_idx, const i64 *klass_id,
+    const i64 *fu_budgets,          /* [n_classes - n_arrays] */
+    const i64 *mem_rd, const i64 *mem_wr,      /* [n_arrays] */
+    const u8 *mem_banked, const i64 *mem_nbanks,
+    const i64 *mem_maxfail, const u8 *mem_configured,
+    i64 mem_latency, i64 ports_per_bank, i64 max_cycles,
+    i64 *out)   /* [5 + n_arrays]: cycles, issued, mem_issued,
+                   conflict_stalls, mem_cycles_used, per_array... */
+{
+    i64 rc = -4;
+    i64 *npreds = NULL, *prio = NULL, *coff = NULL, *hsz = NULL;
+    i64 *harena = NULL, *inflight = NULL, *deferred = NULL;
+    i64 *bank_use = NULL, *touched = NULL, *per_array = NULL;
+    u8 *delayed = NULL;
+
+    i64 max_nb = 1;
+    for (i64 a = 0; a < n_arrays; a++)
+        if (mem_configured[a] && mem_nbanks[a] > max_nb) max_nb = mem_nbanks[a];
+
+    npreds = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
+    prio = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
+    coff = calloc((size_t)n_classes + 1, sizeof(i64));
+    hsz = calloc((size_t)n_classes, sizeof(i64));
+    harena = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
+    inflight = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
+    deferred = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
+    bank_use = calloc((size_t)max_nb, sizeof(i64));
+    touched = malloc((size_t)max_nb * sizeof(i64));
+    per_array = calloc((size_t)(n_arrays > 0 ? n_arrays : 1), sizeof(i64));
+    delayed = calloc((size_t)(n > 0 ? n : 1), 1);
+    if (!npreds || !prio || !coff || !hsz || !harena || !inflight ||
+        !deferred || !bank_use || !touched || !per_array || !delayed)
+        goto cleanup;
+
+    /* per-class heap arena offsets: heap c may hold every node of class c */
+    for (i64 i = 0; i < n; i++) coff[klass_id[i] + 1]++;
+    for (i64 c = 0; c < n_classes; c++) coff[c + 1] += coff[c];
+
+    memcpy(npreds, indegree, (size_t)n * sizeof(i64));
+    for (i64 i = 0; i < n; i++) prio[i] = -height[i] * n + i;
+
+    for (i64 i = 0; i < n; i++)
+        if (npreds[i] == 0) {
+            i64 c = klass_id[i];
+            heap_push(&harena[coff[c]], &hsz[c], prio[i]);
+        }
+
+    i64 inflight_sz = 0;
+    i64 cycle = 0, issued = 0, mem_issued = 0, stalls = 0;
+    i64 mem_cycles_used = 0, remaining = n;
+
+    while (remaining > 0) {
+        if (cycle > max_cycles) { rc = -1; goto cleanup; }
+
+        /* ---- retire ---- */
+        i64 retire_limit = cycle * n + n - 1;
+        while (inflight_sz > 0 && inflight[0] <= retire_limit) {
+            i64 node = node_of(heap_pop(inflight, &inflight_sz), n);
+            remaining--;
+            for (i64 e = succ_ptr[node]; e < succ_ptr[node + 1]; e++) {
+                i64 s = succ_idx[e];
+                if (--npreds[s] == 0) {
+                    i64 c = klass_id[s];
+                    heap_push(&harena[coff[c]], &hsz[c], prio[s]);
+                }
+            }
+        }
+
+        /* ---- issue ---- */
+        i64 any_mem = 0;
+        int any_active = 0;
+        for (i64 c = 0; c < n_classes; c++) {
+            if (hsz[c] == 0) continue;
+            i64 *heap = &harena[coff[c]];
+            if (c >= n_arrays) {
+                i64 budget = fu_budgets[c - n_arrays];
+                while (hsz[c] > 0 && budget > 0) {
+                    i64 node = node_of(heap_pop(heap, &hsz[c]), n);
+                    heap_push(inflight, &inflight_sz,
+                              (cycle + node_lat[node]) * n + node);
+                    issued++;
+                    budget--;
+                }
+            } else {
+                if (!mem_configured[c]) { rc = -3; goto cleanup; }
+                i64 rd = mem_rd[c], wr = mem_wr[c];
+                int bankedf = mem_banked[c];
+                i64 nb = mem_nbanks[c], maxf = mem_maxfail[c];
+                i64 nd = 0, failed = 0, sat = 0, ntouch = 0;
+                while (hsz[c] > 0 && (rd > 0 || wr > 0)) {
+                    if (bankedf && (sat >= nb || failed >= maxf)) break;
+                    i64 item = heap_pop(heap, &hsz[c]);
+                    i64 node = node_of(item, n);
+                    int ld = is_load[node];
+                    if (ld && rd <= 0) {
+                        deferred[nd++] = item;
+                        if (++failed >= maxf) break;
+                        continue;
+                    }
+                    if (!ld && wr <= 0) {
+                        deferred[nd++] = item;
+                        if (++failed >= maxf) break;
+                        continue;
+                    }
+                    if (bankedf) {
+                        i64 bank = word_idx[node] % nb;
+                        i64 used = bank_use[bank];
+                        if (used >= ports_per_bank) {
+                            deferred[nd++] = item;
+                            if (!delayed[node]) { delayed[node] = 1; stalls++; }
+                            failed++;
+                            continue;
+                        }
+                        if (used == 0) touched[ntouch++] = bank;
+                        bank_use[bank] = used + 1;
+                        if (used + 1 == ports_per_bank) sat++;
+                    }
+                    i64 lat = ld ? mem_latency : node_lat[node];
+                    heap_push(inflight, &inflight_sz, (cycle + lat) * n + node);
+                    issued++;
+                    mem_issued++;
+                    any_mem++;
+                    per_array[c]++;
+                    if (ld) rd--; else wr--;
+                }
+                for (i64 k = 0; k < nd; k++)
+                    heap_push(heap, &hsz[c], deferred[k]);
+                for (i64 k = 0; k < ntouch; k++)
+                    bank_use[touched[k]] = 0;
+            }
+            if (hsz[c] > 0) any_active = 1;
+        }
+        if (any_mem) mem_cycles_used++;
+
+        cycle++;
+        if (!any_active) {
+            if (inflight_sz == 0) {
+                if (remaining > 0) { rc = -2; goto cleanup; }
+            } else {
+                i64 next_finish = inflight[0] / n;
+                if (next_finish > cycle) cycle = next_finish;
+            }
+        }
+    }
+
+    out[0] = cycle;
+    out[1] = issued;
+    out[2] = mem_issued;
+    out[3] = stalls;
+    out[4] = mem_cycles_used;
+    for (i64 a = 0; a < n_arrays; a++) out[5 + a] = per_array[a];
+    rc = 0;
+
+cleanup:
+    free(npreds); free(prio); free(coff); free(hsz); free(harena);
+    free(inflight); free(deferred); free(bank_use); free(touched);
+    free(per_array); free(delayed);
+    return rc;
+}

@@ -1,0 +1,333 @@
+"""Prepared-trace layer: one-time, vectorized per-trace analysis.
+
+The DSE loop evaluates the *same* dynamic trace under dozens of memory
+designs and unroll factors.  In the seed implementation every
+``schedule()`` call rebuilt the successor CSR, the list-scheduling
+heights and the per-array geometry with Python loops — identical work
+repeated for all 64 design points per benchmark.  :class:`PreparedTrace`
+computes everything that depends only on the trace **once** (vectorized
+with numpy O(E) frontier sweeps), so each design point pays only for the
+port-constrained cycle loop.
+
+PreparedTrace contract
+----------------------
+A ``PreparedTrace`` is an immutable companion of one :class:`Trace`:
+
+* graph structure: ``succ_ptr``/``succ_idx`` (CSR successor lists, same
+  ordering as the seed ``_succ_lists``), ``indegree``, ``roots``;
+* scheduling priorities: ``height`` (longest latency-weighted path to a
+  sink, the list-scheduling priority) and ``depth`` (dependency level) —
+  both bit-identical to the seed recurrences;
+* per-array geometry: ``array_depths`` (power-of-two depth from the max
+  word index), ``loads_per_array``/``stores_per_array``;
+* locality stats: Weinberg ``locality`` over the memory stream;
+* ``fingerprint``: a content hash of the trace, the cache key used by
+  ``repro.core.dse.runner``;
+* contiguous numpy per-node arrays (``is_load_np``, ``latency_np``,
+  ``word_index_np``, ``klass_np``) consumed by the compiled C cycle
+  loop, plus lazily-built plain-Python mirrors (:class:`PyMirrors`,
+  via :meth:`PreparedTrace.py_mirrors`) for the pure-Python reference
+  loop — built only when that fallback actually runs.
+
+``prepare_trace(tr)`` memoizes the analysis on the trace object itself,
+so repeated calls (and every consumer that passes a raw ``Trace``) share
+one analysis.  ``schedule()`` accepts either a ``Trace`` or a
+``PreparedTrace``; results are identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.sim import trace as T
+
+_PREPARED_ATTR = "_prepared_trace"
+
+# fixed resource-class order: class id = array_id for memory ops, or
+# n_arrays + FU_ORDER.index(class) for compute ops
+FU_ORDER: tuple[str, ...] = ("fadd", "fmul", "fdiv", "iadd", "imul",
+                             "icmp", "logic")
+
+
+# ----------------------------------------------------------------------
+# vectorized DAG analyses (O(E) total work, swept frontier by frontier)
+# ----------------------------------------------------------------------
+def _flatten_ranges(starts: np.ndarray, ends: np.ndarray) -> np.ndarray:
+    """Concatenate ``[arange(s, e) for s, e in zip(starts, ends)]``."""
+    lens = ends - starts
+    total = int(lens.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    cum = np.cumsum(lens)
+    out = np.arange(total, dtype=np.int64)
+    out -= np.repeat(cum - lens, lens)
+    out += np.repeat(starts, lens)
+    return out
+
+
+def successor_csr(pred_ptr: np.ndarray, pred_idx: np.ndarray,
+                  n: int) -> tuple[np.ndarray, np.ndarray]:
+    """CSR successor lists from the predecessor CSR (vectorized).
+
+    Edge ordering matches the seed implementation: for each node ``p``
+    the successors appear in increasing destination-id order.
+    """
+    counts = np.bincount(pred_idx, minlength=n).astype(np.int64)
+    ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    dst = np.repeat(np.arange(n, dtype=np.int64),
+                    (pred_ptr[1:] - pred_ptr[:-1]))
+    order = np.argsort(pred_idx, kind="stable")
+    return ptr, dst[order]
+
+
+def dependency_depths(pred_ptr: np.ndarray, pred_idx: np.ndarray,
+                      succ_ptr: np.ndarray, succ_idx: np.ndarray) -> np.ndarray:
+    """Dependency depth (critical-path level) per node, vectorized.
+
+    Same recurrence as the seed ``Trace.depths()``:
+    ``depth[i] = max(depth[preds]) + 1`` (0 for roots).
+    """
+    n = pred_ptr.shape[0] - 1
+    indeg = (pred_ptr[1:] - pred_ptr[:-1]).astype(np.int64).copy()
+    depth = np.zeros(n, np.int32)
+    frontier = np.nonzero(indeg == 0)[0]
+    while frontier.size:
+        starts, ends = succ_ptr[frontier], succ_ptr[frontier + 1]
+        edges = _flatten_ranges(starts, ends)
+        if edges.size == 0:
+            break
+        dsts = succ_idx[edges]
+        srcs = np.repeat(frontier, ends - starts)
+        np.maximum.at(depth, dsts, depth[srcs] + 1)
+        hit = np.bincount(dsts, minlength=n)
+        indeg -= hit
+        frontier = np.nonzero((indeg == 0) & (hit > 0))[0]
+    return depth
+
+
+def schedule_heights(kinds: np.ndarray, pred_ptr: np.ndarray,
+                     pred_idx: np.ndarray, succ_ptr: np.ndarray,
+                     succ_idx: np.ndarray) -> np.ndarray:
+    """Longest latency-weighted path to any sink (list-sched priority).
+
+    Same recurrence as the seed ``_heights``: sinks are 0, otherwise
+    ``h[i] = max(h[succs]) + LATENCY[kind[i]]``.
+    """
+    n = kinds.shape[0]
+    lat = np.asarray([T.LATENCY[k] for k in range(len(T.LATENCY))],
+                     np.int64)[kinds]
+    outdeg = (succ_ptr[1:] - succ_ptr[:-1]).astype(np.int64).copy()
+    best_succ = np.zeros(n, np.int64)
+    h = np.zeros(n, np.int64)
+    frontier = np.nonzero(outdeg == 0)[0]          # sinks: h == 0
+    while frontier.size:
+        starts, ends = pred_ptr[frontier], pred_ptr[frontier + 1]
+        edges = _flatten_ranges(starts, ends)
+        if edges.size == 0:
+            break
+        preds = pred_idx[edges]
+        np.maximum.at(best_succ, preds,
+                      np.repeat(h[frontier], ends - starts))
+        hit = np.bincount(preds, minlength=n)
+        outdeg -= hit
+        frontier = np.nonzero((outdeg == 0) & (hit > 0))[0]
+        h[frontier] = best_succ[frontier] + lat[frontier]
+    return h
+
+
+# ----------------------------------------------------------------------
+def trace_fingerprint(tr: T.Trace) -> str:
+    """Stable content hash of a trace (the on-disk sweep-cache key)."""
+    hsh = hashlib.sha256()
+    hsh.update(tr.name.encode())
+    for arr in (tr.kinds, tr.array_ids, tr.addrs, tr.pred_ptr, tr.pred_idx):
+        hsh.update(np.ascontiguousarray(arr).tobytes())
+    for aid in sorted(tr.word_bytes):
+        hsh.update(f"{aid}:{tr.word_bytes[aid]}:"
+                   f"{tr.array_names.get(aid, '')};".encode())
+    return hsh.hexdigest()
+
+
+@dataclasses.dataclass
+class PyMirrors:
+    """Plain-Python mirrors of the per-node arrays, used only by the
+    pure-Python reference cycle loop (built lazily: when the compiled C
+    loop is available these are never needed).
+
+    ``packed_prio[i] = -height[i] * n_nodes + i``: integer comparison of
+    packed entries orders exactly like the (neg_height, node) tuple
+    (node < n_nodes), but heap ops avoid tuple allocation and
+    lexicographic compares in the cycle loop.
+    """
+    succ_lists: list[list[int]]
+    latency_list: list[int]
+    is_load: list[bool]
+    word_index: list[int]
+    klass_id: list[int]        # array_id, or n_arrays + FU_ORDER index
+    roots: list[int]
+    packed_prio: list[int]
+
+
+@dataclasses.dataclass
+class PreparedTrace:
+    """One-time trace analysis shared by every design-point evaluation.
+
+    See the module docstring for the full contract.  Treat instances as
+    immutable: the scheduler and sweep layers read but never mutate them.
+    """
+    trace: T.Trace
+    fingerprint: str
+    # graph structure (numpy)
+    succ_ptr: np.ndarray
+    succ_idx: np.ndarray
+    indegree: np.ndarray
+    height: np.ndarray
+    depth: np.ndarray
+    # per-array geometry / stats
+    array_depths: dict[int, int]
+    loads_per_array: dict[int, int]
+    stores_per_array: dict[int, int]
+    locality: float
+    n_arrays: int
+    # contiguous numpy per-node arrays for the compiled cycle loop
+    is_load_np: np.ndarray     # [N] uint8
+    latency_np: np.ndarray     # [N] int64
+    word_index_np: np.ndarray  # [N] int64
+    klass_np: np.ndarray       # [N] int64
+    _mirrors: "PyMirrors | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def name(self) -> str:
+        return self.trace.name
+
+    @property
+    def n_nodes(self) -> int:
+        return self.trace.n_nodes
+
+    def py_mirrors(self) -> PyMirrors:
+        """Build (once) the plain-list mirrors for the Python loop."""
+        if self._mirrors is None:
+            n = self.trace.n_nodes
+            ptr_l = self.succ_ptr.tolist()
+            idx_l = self.succ_idx.tolist()
+            self._mirrors = PyMirrors(
+                succ_lists=[idx_l[ptr_l[i]:ptr_l[i + 1]] for i in range(n)],
+                latency_list=self.latency_np.tolist(),
+                is_load=[bool(b) for b in self.is_load_np.tolist()],
+                word_index=self.word_index_np.tolist(),
+                klass_id=self.klass_np.tolist(),
+                roots=np.nonzero(self.indegree == 0)[0].tolist(),
+                packed_prio=(-self.height * max(n, 1)
+                             + np.arange(n)).tolist(),
+            )
+        return self._mirrors
+
+
+def _array_depths(tr: T.Trace, word_idx: np.ndarray) -> dict[int, int]:
+    """Power-of-two depth per array from the trace's max word index."""
+    depths: dict[int, int] = {}
+    mem = tr.mem_mask()
+    for aid in tr.array_names:
+        sel = mem & (tr.array_ids == aid)
+        if not sel.any():
+            depths[aid] = 16
+            continue
+        max_idx = int(word_idx[sel].max())
+        depths[aid] = max(16, 1 << (max_idx + 1).bit_length())
+    return depths
+
+
+def _build(tr: T.Trace) -> PreparedTrace:
+    from repro.core.locality import trace_locality
+    from repro.core.sim import _cycle_ext
+
+    n = tr.n_nodes
+    succ_ptr, succ_idx = successor_csr(tr.pred_ptr, tr.pred_idx, n)
+    lat_np = np.asarray([T.LATENCY[k] for k in range(len(T.LATENCY))],
+                        np.int64)[tr.kinds]
+    analyze = _cycle_ext.load_analyze()
+    if analyze is not None and n:
+        # single C pass over the CSR; bit-identical to the numpy sweeps
+        import ctypes
+        depth64 = np.zeros(n, np.int64)
+        height = np.zeros(n, np.int64)
+        i64p = ctypes.POINTER(ctypes.c_longlong)
+        analyze(n,
+                tr.pred_ptr.astype(np.int64, copy=False).ctypes.data_as(i64p),
+                np.ascontiguousarray(tr.pred_idx, np.int64).ctypes.data_as(i64p),
+                succ_ptr.ctypes.data_as(i64p),
+                succ_idx.ctypes.data_as(i64p),
+                np.ascontiguousarray(lat_np).ctypes.data_as(i64p),
+                depth64.ctypes.data_as(i64p),
+                height.ctypes.data_as(i64p))
+        depth = depth64.astype(np.int32)
+    else:
+        height = schedule_heights(tr.kinds, tr.pred_ptr, tr.pred_idx,
+                                  succ_ptr, succ_idx)
+        depth = dependency_depths(tr.pred_ptr, tr.pred_idx,
+                                  succ_ptr, succ_idx)
+    indegree = (tr.pred_ptr[1:] - tr.pred_ptr[:-1]).astype(np.int64)
+
+    # word index per node (-1 for compute ops), vectorized per array
+    word_idx = np.full(n, -1, np.int64)
+    mem = tr.mem_mask()
+    for aid, wb in tr.word_bytes.items():
+        sel = mem & (tr.array_ids == aid)
+        word_idx[sel] = tr.addrs[sel] // wb
+
+    loads = {aid: int(np.sum(mem & (tr.array_ids == aid)
+                             & (tr.kinds == T.LOAD)))
+             for aid in tr.array_names}
+    stores = {aid: int(np.sum(mem & (tr.array_ids == aid)
+                              & (tr.kinds == T.STORE)))
+              for aid in tr.array_names}
+
+    addrs_m, aids_m = tr.mem_addrs_and_arrays()
+    locality = trace_locality(addrs_m, aids_m) if addrs_m.size else 0.0
+
+    # resource class per node: array id for memory ops, else
+    # n_arrays + FU_ORDER index (vectorized via a kind -> class table)
+    n_arrays = (max(tr.array_names) + 1) if tr.array_names else 0
+    fu_of_kind = np.zeros(len(T.LATENCY), np.int64)
+    for kind, fu_name in T.FU_CLASS.items():
+        fu_of_kind[kind] = n_arrays + FU_ORDER.index(fu_name)
+    klass_np = np.where(mem, tr.array_ids.astype(np.int64),
+                        fu_of_kind[tr.kinds])
+
+    return PreparedTrace(
+        trace=tr,
+        fingerprint=trace_fingerprint(tr),
+        succ_ptr=succ_ptr,
+        succ_idx=succ_idx,
+        indegree=indegree,
+        height=height,
+        depth=depth,
+        array_depths=_array_depths(tr, word_idx),
+        loads_per_array=loads,
+        stores_per_array=stores,
+        locality=float(locality),
+        n_arrays=n_arrays,
+        is_load_np=np.ascontiguousarray(tr.kinds == T.LOAD, np.uint8),
+        latency_np=np.ascontiguousarray(lat_np),
+        word_index_np=np.ascontiguousarray(word_idx, np.int64),
+        klass_np=np.ascontiguousarray(klass_np),
+    )
+
+
+def prepare_trace(tr: "T.Trace | PreparedTrace") -> PreparedTrace:
+    """Return the (memoized) :class:`PreparedTrace` for ``tr``.
+
+    Passing an already-prepared trace is a no-op, so every API in the
+    sim/dse stack accepts ``Trace | PreparedTrace`` interchangeably.
+    """
+    if isinstance(tr, PreparedTrace):
+        return tr
+    cached = getattr(tr, _PREPARED_ATTR, None)
+    if cached is None:
+        cached = _build(tr)
+        object.__setattr__(tr, _PREPARED_ATTR, cached)
+    return cached

@@ -20,16 +20,22 @@ Resource model per cycle:
 
 The scheduler is event-driven over the trace's DDG: priority = longest
 path to sink (critical path first), standard list scheduling.
+
+``schedule()`` accepts a raw :class:`Trace` or a :class:`PreparedTrace`
+(see ``repro.core.sim.prepared``).  All trace-only analysis — successor
+CSR, heights, per-node classes — lives in the prepared layer and is
+computed once per trace; a ``schedule()`` call pays only for the cycle
+loop, which is what makes shared-trace DSE sweeps cheap.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 
-import numpy as np
-
 from repro.core.amm.spec import AMMSpec
+from repro.core.sim import _cycle_ext
 from repro.core.sim import trace as T
+from repro.core.sim.prepared import FU_ORDER, PreparedTrace, prepare_trace
 
 
 @dataclasses.dataclass
@@ -46,7 +52,7 @@ class ScheduleResult:
     cycles: int
     issued: int
     mem_issued: int
-    bank_conflict_stalls: int               # accesses delayed >=1 cycle by banking
+    bank_conflict_stalls: int               # unique accesses delayed >=1 cycle by banking
     per_array_accesses: dict[int, int]
     avg_mem_parallelism: float
 
@@ -54,158 +60,248 @@ class ScheduleResult:
         return dataclasses.asdict(self)
 
 
-def _succ_lists(tr: T.Trace) -> tuple[np.ndarray, np.ndarray]:
-    """CSR successor lists from the predecessor CSR."""
-    n = tr.n_nodes
-    counts = np.zeros(n, np.int64)
-    np.add.at(counts, tr.pred_idx, 1)
-    ptr = np.zeros(n + 1, np.int64)
-    np.cumsum(counts, out=ptr[1:])
-    idx = np.empty(int(ptr[-1]), np.int64)
-    fill = ptr[:-1].copy()
-    for i in range(n):
-        lo, hi = tr.pred_ptr[i], tr.pred_ptr[i + 1]
-        for p in tr.pred_idx[lo:hi]:
-            idx[fill[p]] = i
-            fill[p] += 1
-    return ptr, idx
+def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig) -> ScheduleResult:
+    """Run the port-constrained list scheduler on one trace.
+
+    Dispatches to the compiled cycle loop when available (see
+    ``repro.core.sim._cycle_ext``); the pure-Python loop below is the
+    reference implementation and the fallback.  Both are cycle-exact
+    twins — golden regression tests pin their outputs against the seed
+    scheduler.
+    """
+    pt = prepare_trace(tr)
+    fast = _cycle_ext.load()
+    if fast is not None:
+        res = _schedule_c(fast, pt, cfg)
+        if res is not None:
+            return res
+    return _schedule_py(pt, cfg)
 
 
-def _heights(tr: T.Trace, succ_ptr: np.ndarray, succ_idx: np.ndarray) -> np.ndarray:
-    """Longest path to any sink (list-scheduling priority)."""
-    n = tr.n_nodes
-    h = np.zeros(n, np.int64)
-    for i in range(n - 1, -1, -1):
-        lo, hi = succ_ptr[i], succ_ptr[i + 1]
-        if hi > lo:
-            h[i] = h[succ_idx[lo:hi]].max() + T.LATENCY[int(tr.kinds[i])]
-    return h
+def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult | None":
+    import ctypes
+
+    import numpy as np
+
+    trace = pt.trace
+    n = trace.n_nodes
+    n_arrays = pt.n_arrays
+    n_classes = n_arrays + len(FU_ORDER)
+
+    fu_budgets = np.asarray(
+        [cfg.fu_counts.get(name, 1) for name in FU_ORDER], np.int64)
+    mem_rd = np.zeros(max(n_arrays, 1), np.int64)
+    mem_wr = np.zeros(max(n_arrays, 1), np.int64)
+    mem_banked = np.zeros(max(n_arrays, 1), np.uint8)
+    mem_nbanks = np.ones(max(n_arrays, 1), np.int64)
+    mem_maxfail = np.zeros(max(n_arrays, 1), np.int64)
+    mem_configured = np.zeros(max(n_arrays, 1), np.uint8)
+    for aid in range(n_arrays):
+        spec = cfg.mem.get(aid)
+        if spec is None:
+            continue
+        rd, wr = spec.n_read, spec.n_write
+        if spec.kind == "multipump":
+            rd, wr = rd * 2, wr * 2
+        mem_rd[aid] = rd
+        mem_wr[aid] = wr
+        mem_banked[aid] = spec.kind == "banked"
+        mem_nbanks[aid] = spec.n_banks
+        mem_maxfail[aid] = 4 * spec.n_banks * cfg.ports_per_bank + 8
+        mem_configured[aid] = 1
+
+    out = np.zeros(5 + n_arrays, np.int64)
+    i64p = ctypes.POINTER(ctypes.c_longlong)
+    u8p = ctypes.POINTER(ctypes.c_ubyte)
+
+    def ip(a):
+        return a.ctypes.data_as(i64p)
+
+    def up(a):
+        return a.ctypes.data_as(u8p)
+
+    rc = fast(
+        n, n_arrays, n_classes,
+        ip(pt.succ_ptr), ip(pt.succ_idx), ip(pt.indegree), ip(pt.height),
+        up(pt.is_load_np), ip(pt.latency_np), ip(pt.word_index_np),
+        ip(pt.klass_np),
+        ip(fu_budgets), ip(mem_rd), ip(mem_wr),
+        up(mem_banked), ip(mem_nbanks), ip(mem_maxfail), up(mem_configured),
+        cfg.mem_latency, cfg.ports_per_bank, cfg.max_cycles,
+        ip(out))
+    if rc == -1:
+        raise RuntimeError(f"scheduler exceeded {cfg.max_cycles} cycles")
+    if rc == -2:
+        raise RuntimeError("deadlock: nodes remain but nothing ready/inflight")
+    if rc == -3:
+        raise KeyError("memory op on array without a ScheduleConfig.mem spec")
+    if rc != 0:
+        return None                        # allocation failure: fall back
+    return ScheduleResult(
+        cycles=int(out[0]),
+        issued=int(out[1]),
+        mem_issued=int(out[2]),
+        bank_conflict_stalls=int(out[3]),
+        per_array_accesses={a: int(out[5 + a]) for a in trace.array_names},
+        avg_mem_parallelism=int(out[2]) / max(int(out[4]), 1),
+    )
 
 
-def schedule(tr: T.Trace, cfg: ScheduleConfig) -> ScheduleResult:
-    n = tr.n_nodes
-    succ_ptr, succ_idx = _succ_lists(tr)
-    height = _heights(tr, succ_ptr, succ_idx)
-    n_preds = (tr.pred_ptr[1:] - tr.pred_ptr[:-1]).astype(np.int64).copy()
+def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
+    trace = pt.trace
+    n = trace.n_nodes
 
-    # ready heaps per resource class: ("mem", array_id) or ("fu", class)
-    ready: dict[tuple, list] = {}
+    # shared, read-only per-trace state (plain lists: no numpy boxing in
+    # the cycle loop; built lazily — the C loop never needs them)
+    mir = pt.py_mirrors()
+    succ = mir.succ_lists
+    is_load = mir.is_load
+    node_lat = mir.latency_list             # FU latency; == STORE latency for stores
+    word_idx = mir.word_index
+    kid = mir.klass_id                      # resource class per node
+    n_arrays = pt.n_arrays
+    prio = mir.packed_prio                  # packed (neg_height, node) per node
+    heappush, heappop, heapify = heapq.heappush, heapq.heappop, heapq.heapify
 
-    def klass(i: int) -> tuple:
-        k = int(tr.kinds[i])
-        if k <= T.STORE:
-            return ("mem", int(tr.array_ids[i]))
-        return ("fu", T.FU_CLASS[k])
+    # per-call mutable state; one ready heap per resource class id
+    # (array ids, then FU classes — see prepared.FU_ORDER).  Heap entries
+    # are packed ints: ready heaps hold prio[i], the inflight heap holds
+    # finish_cycle * n + node — both order exactly like the seed tuples.
+    n_preds = pt.indegree.tolist()
+    heaps: list[list] = [[] for _ in range(n_arrays + len(FU_ORDER))]
+    active: set[int] = set()                # class ids with a nonempty heap
+    for i in mir.roots:
+        c = kid[i]
+        heaps[c].append(prio[i])
+        active.add(c)
+    for c in active:
+        heapify(heaps[c])
 
-    def push(i: int) -> None:
-        ready.setdefault(klass(i), []).append((-int(height[i]), i))
+    # per-class config, resolved once: FU issue widths and memory specs
+    fu_budgets = [cfg.fu_counts.get(name, 1) for name in FU_ORDER]
+    ports_per_bank = cfg.ports_per_bank
+    mem_info: list = [None] * n_arrays      # (rd, wr, banked, n_banks, max_failed)
+    for aid in range(n_arrays):
+        spec = cfg.mem.get(aid)
+        if spec is None:
+            continue                        # KeyError only if ops ever ready
+        rd, wr = spec.n_read, spec.n_write
+        if spec.kind == "multipump":
+            rd, wr = rd * 2, wr * 2
+        mem_info[aid] = (rd, wr, spec.kind == "banked", spec.n_banks,
+                         4 * spec.n_banks * ports_per_bank + 8)
 
-    for i in np.nonzero(n_preds == 0)[0]:
-        push(int(i))
-    for h in ready.values():
-        heapq.heapify(h)
-
-    inflight: list[tuple[int, int]] = []   # (finish_cycle, node)
+    inflight: list[int] = []               # finish_cycle * n + node
     cycle = 0
     issued = mem_issued = conflict_stalls = 0
-    per_array: dict[int, int] = {a: 0 for a in tr.array_names}
+    per_array: dict[int, int] = {a: 0 for a in trace.array_names}
     mem_cycles_used = 0
     remaining = n
-
-    specs = cfg.mem
+    delayed = bytearray(n)                 # nodes already counted as bank-stalled
+    mem_latency = cfg.mem_latency
+    max_cycles = cfg.max_cycles
 
     while remaining > 0:
-        if cycle > cfg.max_cycles:
-            raise RuntimeError(f"scheduler exceeded {cfg.max_cycles} cycles")
+        if cycle > max_cycles:
+            raise RuntimeError(f"scheduler exceeded {max_cycles} cycles")
 
         # ---- retire ----
-        while inflight and inflight[0][0] <= cycle:
-            _, node = heapq.heappop(inflight)
+        retire_limit = cycle * n + n - 1   # packed entries with finish <= cycle
+        while inflight and inflight[0] <= retire_limit:
+            node = heappop(inflight) % n
             remaining -= 1
-            lo, hi = succ_ptr[node], succ_ptr[node + 1]
-            for s in succ_idx[lo:hi]:
+            for s in succ[node]:
                 n_preds[s] -= 1
                 if n_preds[s] == 0:
-                    cls = klass(int(s))
-                    heapq.heappush(ready.setdefault(cls, []), (-int(height[s]), int(s)))
+                    c = kid[s]
+                    heappush(heaps[c], prio[s])
+                    active.add(c)
 
         # ---- issue ----
         any_mem_this_cycle = 0
-        for cls, heap in list(ready.items()):
-            if not heap:
-                continue
-            if cls[0] == "fu":
-                budget = cfg.fu_counts.get(cls[1], 1)
+        for c in list(active):
+            heap = heaps[c]
+            if c >= n_arrays:
+                budget = fu_budgets[c - n_arrays]
                 while heap and budget > 0:
-                    _, node = heapq.heappop(heap)
-                    lat = T.LATENCY[int(tr.kinds[node])]
-                    heapq.heappush(inflight, (cycle + lat, node))
+                    node = heappop(heap) % n
+                    heappush(inflight, (cycle + node_lat[node]) * n + node)
                     issued += 1
                     budget -= 1
             else:
-                aid = cls[1]
-                spec = specs[aid]
-                rd_budget = spec.n_read
-                wr_budget = spec.n_write
-                if spec.kind == "multipump":
-                    rd_budget, wr_budget = rd_budget * 2, wr_budget * 2
+                info = mem_info[c]
+                if info is None:
+                    raise KeyError(c)      # memory op on an unconfigured array
+                rd_budget, wr_budget, banked, n_banks, max_failed = info
                 bank_use: dict[int, int] = {}
-                deferred: list[tuple[int, int]] = []
+                deferred: list[int] = []
                 # Bound the scan: once every bank is saturated (or we have
                 # burned a generous number of failed pops) nothing further
                 # in this array's heap can issue this cycle.  Without the
                 # cap the deferral loop is O(ready) per cycle -> quadratic.
                 failed_pops = 0
-                max_failed = 4 * spec.n_banks * cfg.ports_per_bank + 8
                 saturated_banks = 0
                 while heap and (rd_budget > 0 or wr_budget > 0):
-                    if spec.kind == "banked" and (
-                        saturated_banks >= spec.n_banks or failed_pops >= max_failed
-                    ):
+                    if banked and (saturated_banks >= n_banks
+                                   or failed_pops >= max_failed):
                         break
-                    pr, node = heapq.heappop(heap)
-                    is_load = int(tr.kinds[node]) == T.LOAD
-                    if is_load and rd_budget <= 0:
-                        deferred.append((pr, node))
+                    item = heappop(heap)
+                    node = item % n
+                    ld = is_load[node]
+                    if ld and rd_budget <= 0:
+                        deferred.append(item)
                         failed_pops += 1
                         if failed_pops >= max_failed:
                             break
                         continue
-                    if not is_load and wr_budget <= 0:
-                        deferred.append((pr, node))
+                    if not ld and wr_budget <= 0:
+                        deferred.append(item)
                         failed_pops += 1
                         if failed_pops >= max_failed:
                             break
                         continue
-                    if spec.kind == "banked":
-                        word = tr.word_bytes[aid]
-                        bank = (int(tr.addrs[node]) // word) % spec.n_banks
-                        if bank_use.get(bank, 0) >= cfg.ports_per_bank:
-                            deferred.append((pr, node))
-                            conflict_stalls += 1
+                    if banked:
+                        bank = word_idx[node] % n_banks
+                        used = bank_use.get(bank, 0)
+                        if used >= ports_per_bank:
+                            deferred.append(item)
+                            if not delayed[node]:
+                                delayed[node] = 1
+                                conflict_stalls += 1
                             failed_pops += 1
                             continue
-                        bank_use[bank] = bank_use.get(bank, 0) + 1
-                        if bank_use[bank] == cfg.ports_per_bank:
+                        bank_use[bank] = used + 1
+                        if used + 1 == ports_per_bank:
                             saturated_banks += 1
-                    lat = cfg.mem_latency if is_load else T.LATENCY[T.STORE]
-                    heapq.heappush(inflight, (cycle + lat, node))
+                    lat = mem_latency if ld else node_lat[node]
+                    heappush(inflight, (cycle + lat) * n + node)
                     issued += 1
                     mem_issued += 1
                     any_mem_this_cycle += 1
-                    per_array[aid] = per_array.get(aid, 0) + 1
-                    if is_load:
+                    per_array[c] += 1
+                    if ld:
                         rd_budget -= 1
                     else:
                         wr_budget -= 1
                 for item in deferred:
-                    heapq.heappush(heap, item)
+                    heappush(heap, item)
+            if not heap:
+                active.discard(c)
         if any_mem_this_cycle:
             mem_cycles_used += 1
 
         cycle += 1
-        if not inflight and all(not h for h in ready.values()) and remaining > 0:
-            raise RuntimeError("deadlock: nodes remain but nothing ready/inflight")
+        if not active:
+            if not inflight:
+                if remaining > 0:
+                    raise RuntimeError(
+                        "deadlock: nodes remain but nothing ready/inflight")
+            else:
+                next_finish = inflight[0] // n
+                if next_finish > cycle:
+                    # Nothing can issue or retire until the next in-flight
+                    # op completes; skipping the idle cycles is cycle-exact.
+                    cycle = next_finish
 
     return ScheduleResult(
         cycles=cycle,

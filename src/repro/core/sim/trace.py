@@ -58,15 +58,14 @@ class Trace:
         return self.addrs[m], self.array_ids[m]
 
     def depths(self) -> np.ndarray:
-        """Dependency depth (critical-path level) per node."""
-        n = self.n_nodes
-        depth = np.zeros(n, np.int32)
-        ptr, idx = self.pred_ptr, self.pred_idx
-        for i in range(n):
-            lo, hi = ptr[i], ptr[i + 1]
-            if hi > lo:
-                depth[i] = depth[idx[lo:hi]].max() + 1
-        return depth
+        """Dependency depth (critical-path level) per node.
+
+        Delegates to the memoized :class:`PreparedTrace` analysis, which
+        computes depths with vectorized O(E) frontier sweeps instead of a
+        per-node Python loop.
+        """
+        from repro.core.sim.prepared import prepare_trace
+        return prepare_trace(self).depth
 
     def stats(self) -> dict:
         m = self.mem_mask()
@@ -126,9 +125,11 @@ class TraceBuilder:
         counts = np.fromiter((len(p) for p in self._preds), np.int64, n)
         ptr = np.zeros(n + 1, np.int64)
         np.cumsum(counts, out=ptr[1:])
-        idx = np.empty(int(ptr[-1]), np.int64)
-        for i, p in enumerate(self._preds):
-            idx[ptr[i]:ptr[i + 1]] = p
+        if n and int(ptr[-1]):
+            idx = np.fromiter(
+                (d for p in self._preds for d in p), np.int64, int(ptr[-1]))
+        else:
+            idx = np.empty(0, np.int64)
         return Trace(
             kinds=np.asarray(self._kinds, np.int8),
             array_ids=np.asarray(self._arrays, np.int16),

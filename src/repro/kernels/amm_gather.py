@@ -33,7 +33,9 @@ def _kernel(idx_ref, banks_ref, parity_ref, out_ref, *, n_banks: int,
         # reconstruction path: parity ^ XOR_{j != bank} bank_j[off]
         acc = pl.load(parity_ref, (off, slice(None)))
         for j in range(n_banks):              # static unroll, n_banks small
-            row = pl.load(banks_ref, (j, off, slice(None)))
+            # index with a traced scalar: newer pallas rejects raw ints
+            row = pl.load(banks_ref, (jnp.asarray(j, jnp.int32), off,
+                                      slice(None)))
             acc = jnp.where(j == bank, acc, acc ^ row)
         use_recon = (i % 2) == 1               # odd slot = second port
         pl.store(out_ref, (i, slice(None)),

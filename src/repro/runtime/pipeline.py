@@ -23,6 +23,16 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 
+def _pvary(x: jax.Array, axes: tuple) -> jax.Array:
+    """Mark ``x`` device-varying along ``axes`` (jax >= 0.6 ``lax.pvary``).
+
+    Older jax has no varying-axis type system inside ``shard_map``;
+    there the marker is semantically the identity, so fall back to it.
+    """
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axes) if fn is not None else x
+
+
 def split_stages(stacked_params: Any, n_stages: int) -> Any:
     """Reshape [L, ...] stacked layer params to [P, L/P, ...]."""
 
@@ -62,9 +72,9 @@ def pipeline_apply(
         params_local = jax.tree.map(lambda x: x[0], staged_local)
         mb_shape = mbs.shape[1:]
         # carriers must be marked device-varying along the pipe axis
-        h = jax.lax.pvary(jnp.zeros(mb_shape, mbs.dtype), (axis,))
-        outs = jax.lax.pvary(jnp.zeros((m,) + mb_shape, mbs.dtype), (axis,))
-        mbs = jax.lax.pvary(mbs, (axis,))
+        h = _pvary(jnp.zeros(mb_shape, mbs.dtype), (axis,))
+        outs = _pvary(jnp.zeros((m,) + mb_shape, mbs.dtype), (axis,))
+        mbs = _pvary(mbs, (axis,))
 
         def tick(carry, t):
             h, outs = carry

@@ -1,0 +1,103 @@
+"""Import hypothesis, or fall back to a deterministic mini-shim.
+
+The seed test suite failed collection outright when hypothesis was not
+installed.  Tests import ``given``/``settings``/``st`` from this module
+instead: with hypothesis present (see requirements-dev.txt) they get
+full property testing; without it they get a small deterministic
+replacement that draws seeded pseudo-random examples through the same
+strategy API, so every property still runs against real inputs.
+
+The shim implements only what the suite uses: ``st.integers``,
+``st.booleans``, ``st.lists``, ``st.tuples``, ``st.data``, ``@given``
+and ``@settings(max_examples=..., deadline=...)``.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw_fn(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+
+        def draw(rng):
+            return [elements.draw(rng)
+                    for _ in range(rng.randint(min_size, hi))]
+        return _Strategy(draw)
+
+    def _tuples(*elements):
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elements))
+
+    class _DataObject:
+        def __init__(self, rng: random.Random):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.draw(self._rng)
+
+    _DATA_MARKER = _Strategy(None)  # sentinel resolved by @given
+
+    def _data():
+        return _DATA_MARKER
+
+    st = types.SimpleNamespace(
+        integers=_integers, booleans=_booleans, lists=_lists,
+        tuples=_tuples, data=_data)
+
+    def settings(max_examples: int = 10, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n_examples = getattr(wrapper, "_shim_max_examples", 10)
+
+                def resolve(strategy, rng):
+                    if strategy is _DATA_MARKER:
+                        return _DataObject(rng)
+                    return strategy.draw(rng)
+
+                for example in range(n_examples):
+                    rng = random.Random(0xA11CE + 7919 * example)
+                    drawn = [resolve(s, rng) for s in arg_strategies]
+                    drawn_kw = {k: resolve(s, rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+
+            # Hide the strategy-filled parameters from pytest, which
+            # would otherwise look for fixtures with those names.
+            sig = inspect.signature(fn)
+            params = [p for p in sig.parameters.values()
+                      if p.name not in kw_strategies]
+            if arg_strategies:
+                params = params[:-len(arg_strategies)]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

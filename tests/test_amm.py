@@ -5,8 +5,7 @@ path agreeing with the direct path at every step."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.amm import AMM_KINDS, AMMSpec, make_amm
 

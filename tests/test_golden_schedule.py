@@ -1,0 +1,79 @@
+"""Golden cycle-count regression: the vectorized/prepared scheduler must
+be cycle-exact against the seed implementation.
+
+``golden_schedule.json`` was captured from the seed (pre-PreparedTrace)
+scheduler over a (bench, design, unroll) matrix.  Both the compiled C
+cycle loop and the pure-Python reference loop must reproduce every
+cycles / issued / mem_issued / avg_mem_parallelism value bit-exactly.
+(``bank_conflict_stalls`` is deliberately NOT pinned: the seed
+double-counted multiply-deferred accesses; it now counts unique delayed
+accesses.)
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.core.bench import get_trace
+from repro.core.dse.sweep import DesignPoint, _BASE_FU, _spec_for
+from repro.core.sim import prepare_trace
+from repro.core.sim.scheduler import ScheduleConfig, _schedule_py, schedule
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden_schedule.json").read_text())
+
+_DESIGNS = {
+    "banked4": DesignPoint("banked", 1, 1, 4),
+    "banked32": DesignPoint("banked", 1, 1, 32),
+    "multipump-2R2W": DesignPoint("multipump", 2, 2, 1),
+    "hb_ntx-2R2W": DesignPoint("hb_ntx", 2, 2, 1),
+    "lvt-4R2W": DesignPoint("lvt", 4, 2, 1),
+}
+
+
+def _config(pt, design: str, unroll: int) -> ScheduleConfig:
+    dp = _DESIGNS[design]
+    specs = {aid: _spec_for(dp, pt.array_depths[aid],
+                            pt.trace.word_bytes[aid] * 8)
+             for aid in pt.trace.array_names}
+    return ScheduleConfig(
+        mem=specs,
+        fu_counts={k: v * unroll for k, v in _BASE_FU.items()})
+
+
+def _check(res, g):
+    assert res.cycles == g["cycles"], (g, res.cycles)
+    assert res.issued == g["issued"]
+    assert res.mem_issued == g["mem_issued"]
+    assert abs(res.avg_mem_parallelism - g["avg_mem_parallelism"]) < 1e-9
+
+
+@pytest.mark.parametrize(
+    "g", GOLDEN, ids=[f"{g['bench']}-{g['design']}-u{g['unroll']}"
+                      for g in GOLDEN])
+def test_schedule_matches_seed_golden(g):
+    pt = prepare_trace(get_trace(g["bench"]))
+    _check(schedule(pt, _config(pt, g["design"], g["unroll"])), g)
+
+
+@pytest.mark.parametrize(
+    "g", GOLDEN[::4], ids=[f"{g['bench']}-{g['design']}-u{g['unroll']}"
+                           for g in GOLDEN[::4]])
+def test_python_reference_loop_matches_seed_golden(g):
+    """The pure-Python fallback loop is pinned too (subset: it is ~50x
+    slower than the compiled loop but must stay exact)."""
+    pt = prepare_trace(get_trace(g["bench"]))
+    _check(_schedule_py(pt, _config(pt, g["design"], g["unroll"])), g)
+
+
+def test_c_and_python_loops_agree_everywhere():
+    """Full ScheduleResult equality (including the stall counter) between
+    the compiled and reference loops across the golden matrix subset."""
+    from repro.core.sim import _cycle_ext
+
+    if _cycle_ext.load() is None:
+        pytest.skip("no C compiler available; python loop is the only path")
+    for g in GOLDEN[::3]:
+        pt = prepare_trace(get_trace(g["bench"]))
+        cfg = _config(pt, g["design"], g["unroll"])
+        assert schedule(pt, cfg) == _schedule_py(pt, cfg)

@@ -1,0 +1,139 @@
+"""PreparedTrace invariants: the vectorized one-time analysis must match
+the seed's per-call Python-loop recurrences on arbitrary DAGs."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.bench import get_trace
+from repro.core.sim import (LOAD, STORE, Trace, TraceBuilder, prepare_trace,
+                            trace_fingerprint)
+from repro.core.sim import trace as T
+from repro.core.sim.prepared import (dependency_depths, schedule_heights,
+                                     successor_csr)
+
+
+# ---- seed reference implementations (verbatim recurrences) -----------
+def _ref_succ_lists(tr):
+    n = tr.n_nodes
+    counts = np.zeros(n, np.int64)
+    np.add.at(counts, tr.pred_idx, 1)
+    ptr = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    idx = np.empty(int(ptr[-1]), np.int64)
+    fill = ptr[:-1].copy()
+    for i in range(n):
+        lo, hi = tr.pred_ptr[i], tr.pred_ptr[i + 1]
+        for p in tr.pred_idx[lo:hi]:
+            idx[fill[p]] = i
+            fill[p] += 1
+    return ptr, idx
+
+
+def _ref_heights(tr, succ_ptr, succ_idx):
+    n = tr.n_nodes
+    h = np.zeros(n, np.int64)
+    for i in range(n - 1, -1, -1):
+        lo, hi = succ_ptr[i], succ_ptr[i + 1]
+        if hi > lo:
+            h[i] = h[succ_idx[lo:hi]].max() + T.LATENCY[int(tr.kinds[i])]
+    return h
+
+
+def _ref_depths(tr):
+    n = tr.n_nodes
+    depth = np.zeros(n, np.int32)
+    ptr, idx = tr.pred_ptr, tr.pred_idx
+    for i in range(n):
+        lo, hi = ptr[i], ptr[i + 1]
+        if hi > lo:
+            depth[i] = depth[idx[lo:hi]].max() + 1
+    return depth
+
+
+def _random_trace(seed: int, n_ops: int = 120) -> Trace:
+    rng = np.random.default_rng(seed)
+    tb = TraceBuilder(f"rand{seed}")
+    arrs = [tb.declare_array(f"a{i}", 4) for i in range(3)]
+    nodes = []
+    for i in range(n_ops):
+        deps = tuple(int(d) for d in
+                     rng.choice(i, size=min(i, int(rng.integers(0, 3))),
+                                replace=False)) if i else ()
+        roll = rng.random()
+        if roll < 0.4:
+            nodes.append(tb.load(arrs[i % 3], int(rng.integers(0, 64)), deps))
+        elif roll < 0.55:
+            nodes.append(tb.store(arrs[i % 3], int(rng.integers(0, 64)), deps))
+        else:
+            kind = int(rng.choice([T.FADD, T.FMUL, T.IADD, T.ICMP]))
+            nodes.append(tb.add(kind, deps))
+    return tb.build()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_vectorized_analysis_matches_reference(seed):
+    tr = _random_trace(seed)
+    sp, si = successor_csr(tr.pred_ptr, tr.pred_idx, tr.n_nodes)
+    rp, ri = _ref_succ_lists(tr)
+    np.testing.assert_array_equal(sp, rp)
+    np.testing.assert_array_equal(si, ri)
+    np.testing.assert_array_equal(
+        schedule_heights(tr.kinds, tr.pred_ptr, tr.pred_idx, sp, si),
+        _ref_heights(tr, sp, si))
+    np.testing.assert_array_equal(
+        dependency_depths(tr.pred_ptr, tr.pred_idx, sp, si), _ref_depths(tr))
+
+
+@pytest.mark.parametrize("bench", ["gemm_ncubed", "kmp", "md_knn"])
+def test_prepared_fields_match_reference_on_benchmarks(bench):
+    tr = get_trace(bench)
+    pt = prepare_trace(tr)
+    sp, si = _ref_succ_lists(tr)
+    np.testing.assert_array_equal(pt.succ_ptr, sp)
+    np.testing.assert_array_equal(pt.succ_idx, si)
+    np.testing.assert_array_equal(pt.height, _ref_heights(tr, sp, si))
+    np.testing.assert_array_equal(pt.depth, _ref_depths(tr))
+    np.testing.assert_array_equal(pt.indegree,
+                                  tr.pred_ptr[1:] - tr.pred_ptr[:-1])
+    # trace.depths() delegates to the prepared analysis
+    np.testing.assert_array_equal(tr.depths(), pt.depth)
+
+
+def test_prepare_trace_is_memoized_and_idempotent():
+    tr = _random_trace(99)
+    pt1 = prepare_trace(tr)
+    assert prepare_trace(tr) is pt1
+    assert prepare_trace(pt1) is pt1
+
+
+def test_array_depths_match_seed_formula():
+    tr = get_trace("gemm_ncubed")
+    pt = prepare_trace(tr)
+    m = tr.mem_mask()
+    for aid in tr.array_names:
+        sel = (tr.array_ids == aid) & m
+        max_idx = int(tr.addrs[sel].max()) // tr.word_bytes[aid]
+        assert pt.array_depths[aid] == max(16, 1 << (max_idx + 1).bit_length())
+
+
+def test_fingerprint_sensitive_to_content():
+    a, b = _random_trace(1), _random_trace(2)
+    assert trace_fingerprint(a) != trace_fingerprint(b)
+    assert trace_fingerprint(a) == trace_fingerprint(_random_trace(1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 63), min_size=2, max_size=60))
+def test_chain_heights_equal_chain_latency_sums(idxs):
+    """Serial load chain: height telescopes to the latency-weighted
+    distance from each node to the sink."""
+    tb = TraceBuilder("chain")
+    a = tb.declare_array("a", 4)
+    prev = tb.load(a, idxs[0])
+    for ix in idxs[1:]:
+        prev = tb.load(a, ix, (prev,))
+    pt = prepare_trace(tb.build())
+    n = len(idxs)
+    want = [(n - 1 - i) * T.LATENCY[LOAD] for i in range(n)]
+    np.testing.assert_array_equal(pt.height, want)
+    np.testing.assert_array_equal(pt.depth, np.arange(n))

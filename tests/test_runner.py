@@ -1,0 +1,149 @@
+"""Sweep-runner behavior: cache hit/miss/invalidation, parallel-vs-serial
+equality, deterministic ordering, and the stall-counter fix."""
+import json
+
+import pytest
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.bench import get_trace
+from repro.core.dse import (DEFAULT_DESIGNS, DesignPoint, run_sweep, sweep)
+from repro.core.dse.runner import SweepCache, point_key
+from repro.core.sim import (ScheduleConfig, TraceBuilder, prepare_trace,
+                            schedule)
+from repro.core.dse import runner as runner_mod
+
+DESIGNS = [DesignPoint("banked", n_banks=4), DesignPoint("lvt", 2, 2),
+           DesignPoint("multipump", 2, 2)]
+UNROLLS = (1, 4)
+
+
+@pytest.fixture()
+def pt():
+    return prepare_trace(get_trace("gemm_ncubed"))
+
+
+# ----------------------------------------------------------------------
+# cache
+# ----------------------------------------------------------------------
+def test_cache_miss_then_hit(tmp_path, pt):
+    cache = SweepCache(tmp_path)
+    pts1 = run_sweep(pt, DESIGNS, UNROLLS, cache=cache)
+    assert cache.hits == 0 and cache.misses == len(pts1)
+
+    cache2 = SweepCache(tmp_path)
+    pts2 = run_sweep(pt, DESIGNS, UNROLLS, cache=cache2)
+    assert cache2.hits == len(pts2) and cache2.misses == 0
+    assert pts1 == pts2
+
+
+def test_cache_extension_is_incremental(tmp_path, pt):
+    """A --full-style extension of a cached sweep only pays for the new
+    points."""
+    cache = SweepCache(tmp_path)
+    run_sweep(pt, DESIGNS, (1,), cache=cache)
+    cache2 = SweepCache(tmp_path)
+    pts = run_sweep(pt, DESIGNS, (1, 4), cache=cache2)
+    assert cache2.hits == len(DESIGNS)            # unroll=1 reused
+    assert cache2.misses == len(DESIGNS)          # unroll=4 computed
+    assert [p.unroll for p in pts] == [1, 4] * len(DESIGNS)
+
+
+def test_cache_key_invalidation(pt):
+    fp = pt.fingerprint
+    dp = DESIGNS[0]
+    base = point_key(fp, dp, 1, 2)
+    assert point_key(fp, dp, 2, 2) != base        # unroll
+    assert point_key(fp, dp, 1, 3) != base        # mem_latency
+    assert point_key(fp, DESIGNS[1], 1, 2) != base  # design
+    other = prepare_trace(get_trace("kmp"))
+    assert point_key(other.fingerprint, dp, 1, 2) != base  # trace content
+    assert point_key(fp, dp, 1, 2) == base        # stable
+
+
+def test_cache_tolerates_corrupt_entries(tmp_path, pt):
+    cache = SweepCache(tmp_path)
+    pts1 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache)
+    key = point_key(pt.fingerprint, DESIGNS[0], 1, 2)
+    path = cache._path(key)
+    path.write_text("{not json")
+    cache2 = SweepCache(tmp_path)
+    pts2 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache2)
+    assert cache2.misses == 1 and pts1 == pts2
+    # the corrupt entry was rewritten with the fresh result
+    assert json.loads(path.read_text())["cycles"] == pts1[0].cycles
+
+
+# ----------------------------------------------------------------------
+# parallel
+# ----------------------------------------------------------------------
+def test_parallel_equals_serial(pt, monkeypatch):
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    serial = run_sweep(pt, DESIGNS, UNROLLS, jobs=1)
+    parallel = run_sweep(pt, DESIGNS, UNROLLS, jobs=2)
+    assert serial == parallel
+    order = [(p.design, p.unroll) for p in parallel]
+    assert order == [(d.label, u) for d in DESIGNS for u in UNROLLS]
+
+
+def test_parallel_with_cache_populates_and_reuses(tmp_path, pt, monkeypatch):
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    cache = SweepCache(tmp_path)
+    pts1 = run_sweep(pt, DESIGNS, UNROLLS, jobs=2, cache=cache)
+    cache2 = SweepCache(tmp_path)
+    pts2 = run_sweep(pt, DESIGNS, UNROLLS, jobs=2, cache=cache2)
+    assert cache2.hits == len(pts2) and pts1 == pts2
+
+
+def test_sweep_wrapper_matches_runner(pt):
+    assert sweep(pt, DESIGNS, UNROLLS) == run_sweep(pt, DESIGNS, UNROLLS)
+
+
+def test_small_sweeps_stay_serial(pt, monkeypatch):
+    """The tiny-work heuristic must not spin up worker processes."""
+    def boom(jobs):
+        raise AssertionError("pool should not be created for tiny work")
+    monkeypatch.setattr(runner_mod, "_get_pool", boom)
+    run_sweep(pt, DESIGNS[:1], (1,), jobs=8)      # tiny: serial path
+
+
+# ----------------------------------------------------------------------
+# stall accounting (satellite fix)
+# ----------------------------------------------------------------------
+def test_bank_conflict_stalls_count_unique_accesses():
+    """16 loads to one bank through 1 port/bank: every deferred access is
+    delayed many cycles, but each must be counted once."""
+    tb = TraceBuilder("conflict")
+    a = tb.declare_array("a", 4)
+    n_ops = 16
+    for i in range(n_ops):
+        tb.load(a, i * 8)                         # stride 8 words, 8 banks
+    tr = tb.build()
+    res = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("banked", 8, 8, 256, n_banks=8)},
+        fu_counts={}, ports_per_bank=1))
+    # all ops hit bank 0 with 1 port: op k is delayed iff k >= 1
+    assert res.bank_conflict_stalls == n_ops - 1
+    assert res.cycles >= n_ops
+
+
+def test_conflict_free_design_reports_zero_stalls():
+    tb = TraceBuilder("nostall")
+    a = tb.declare_array("a", 4)
+    for i in range(32):
+        tb.load(a, i * 8)
+    res = schedule(tb.build(), ScheduleConfig(
+        mem={0: AMMSpec("lvt", 4, 1, 256)}, fu_counts={}))
+    assert res.bank_conflict_stalls == 0
+
+
+# ----------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------
+def test_runner_cli_smoke(tmp_path, capsys):
+    runner_mod.main(["--bench", "gemm_ncubed", "--jobs", "1",
+                     "--unrolls", "1", "--cache-dir", str(tmp_path)])
+    out = capsys.readouterr().out
+    lines = [l for l in out.splitlines() if l and not l.startswith("#")]
+    assert lines[0].startswith("bench,design,unroll,cycles")
+    assert len(lines) == 1 + len(DEFAULT_DESIGNS)
+    assert "# cache:" in out
