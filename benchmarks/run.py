@@ -15,6 +15,7 @@ with ``--jobs N`` and enable the incremental on-disk result cache with
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
@@ -24,9 +25,9 @@ import numpy as np
 # set by main() from argparse; module-level so the table functions and
 # ad-hoc imports (e.g. REPL use) see consistent defaults
 FULL = False
-ONLY = None
 JOBS = os.cpu_count() or 1
 CACHE_DIR = None
+ROWS: list[dict] = []  # every _row() call, for --json
 
 
 def _t(fn, *args, repeat=3, **kw):
@@ -38,6 +39,7 @@ def _t(fn, *args, repeat=3, **kw):
 
 
 def _row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us": round(us, 1), "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -154,6 +156,62 @@ def kernel_microbench() -> None:
     _row("kernel.ssd_chunk_q64", us, "interpret=True")
 
 
+def amm_replay() -> None:
+    """Whole-trace functional-sim replay (lax.scan) vs the per-step
+    Python loop, plus vmap-batched replay across seeds."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.amm import AMMSpec, make_amm
+    from repro.core.amm import replay as rp
+
+    depth = 1024 if FULL else 256
+    n_cycles = 2048 if FULL else 512
+    n_seeds = 8
+    rng = np.random.default_rng(0)
+    for spec in (AMMSpec("hb_ntx", 4, 2, depth),
+                 AMMSpec("lvt", 4, 2, depth),
+                 AMMSpec("remap", 2, 3, depth)):
+        init = jnp.asarray(rng.integers(0, 2**32, depth, dtype=np.uint32))
+        ra, wa, wv, wm = (jnp.asarray(x)
+                          for x in rp.make_trace(spec, n_cycles, seed=1))
+        sim = make_amm(spec, init)
+
+        def step_loop():
+            st = sim.state
+            for t in range(n_cycles):
+                st, vals = sim.step(st, ra[t], wa[t], wv[t], wm[t])
+            return jax.block_until_ready(vals)
+
+        def replay_once():
+            _, res = rp.replay(spec, rp.init_flat(spec, init),
+                               ra, wa, wv, wm)
+            return jax.block_until_ready(res.read_vals)
+
+        step_us = _t(step_loop, repeat=1)
+        replay_us = _t(replay_once)
+        _row(f"amm_replay.{spec.kind}", replay_us,
+             f"T={n_cycles};depth={depth};step_loop_us={step_us:.1f};"
+             f"speedup={step_us / replay_us:.1f}x")
+
+        # vmap across seeds: batched oracle verification throughput
+        states = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[rp.init_flat(spec, init) for _ in range(n_seeds)])
+        traces = [rp.make_trace(spec, n_cycles, seed=s)
+                  for s in range(n_seeds)]
+        bra, bwa, bwv, bwm = (jnp.asarray(np.stack([tr[i] for tr in traces]))
+                              for i in range(4))
+
+        def replay_vmapped():
+            _, res = rp.replay_batched(spec, states, bra, bwa, bwv, bwm)
+            return jax.block_until_ready(res.read_vals)
+
+        us = _t(replay_vmapped)
+        _row(f"amm_replay.{spec.kind}_vmap{n_seeds}", us,
+             f"T={n_cycles};per_trace_us={us / n_seeds:.1f}")
+
+
 def lm_smoke_bench() -> None:
     """Tiny-config train/decode step wall time per assigned arch."""
     import jax
@@ -229,36 +287,55 @@ TABLES = {
     "fig5_locality": fig5_locality,
     "tab_synthesis": tab_synthesis,
     "kernel_microbench": kernel_microbench,
+    "amm_replay": amm_replay,
     "lm_smoke_bench": lm_smoke_bench,
     "grad_sync_bench": grad_sync_bench,
 }
 
 
+def _only_list(arg: str | None) -> list[str] | None:
+    if arg is None:
+        return None
+    names = [n.strip() for n in arg.split(",") if n.strip()]
+    unknown = sorted(set(names) - set(TABLES))
+    if unknown:
+        raise SystemExit(f"unknown table(s) {unknown}; "
+                         f"choose from {sorted(TABLES)}")
+    return names
+
+
 def main(argv=None) -> None:
-    global FULL, ONLY, JOBS, CACHE_DIR
+    global FULL, JOBS, CACHE_DIR
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.run",
         description="Paper table/figure benchmark harness (CSV to stdout).")
     ap.add_argument("--full", action="store_true",
                     help="full-size traces/archs (minutes)")
-    ap.add_argument("--only", choices=sorted(TABLES), default=None,
-                    help="run a single table")
+    ap.add_argument("--only", default=None, metavar="TABLE[,TABLE...]",
+                    help=f"run a subset of {sorted(TABLES)}")
     ap.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
                     help="worker processes for DSE sweeps (1 = serial)")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk DSE result cache for incremental re-runs")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON "
+                         "(e.g. BENCH.json) for cross-PR perf tracking")
     args = ap.parse_args(argv)
-    FULL, ONLY, JOBS, CACHE_DIR = (args.full, args.only, args.jobs,
-                                   args.cache_dir)
+    only = _only_list(args.only)
+    FULL, JOBS, CACHE_DIR = args.full, args.jobs, args.cache_dir
 
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():
-        if ONLY and name != ONLY:
+        if only and name not in only:
             continue
         t0 = time.perf_counter()
         fn()
         print(f"# {name} done in {time.perf_counter()-t0:.1f}s",
               file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"full": FULL, "rows": ROWS}, f, indent=1)
+        print(f"# wrote {len(ROWS)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

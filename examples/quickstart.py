@@ -33,7 +33,22 @@ print("parity-path read  :", sim.read_parity(state, jnp.int32(9)),
       "(reconstructed from the other bank + Ref)")
 banks, depth = spec.leaf_banks()
 print(f"built from {banks} two-port banks of depth {depth} "
-      f"(storage overhead {spec.storage_bits() / (256 * 32):.2f}x)\n")
+      f"(storage overhead {spec.storage_bits() / (256 * 32):.2f}x)")
+
+# ...and verify the whole design against a RAM oracle in ONE compiled
+# call: replay a 1024-cycle random op trace through lax.scan.
+from repro.core.amm import replay as rp
+ra, wa, wv, wm = rp.make_trace(spec, n_cycles=1024, seed=0)
+state, res = sim.replay(state, ra, wa, wv, wm)
+oracle = np.arange(256, dtype=np.uint32)
+oracle[7], oracle[9] = 111, 222          # the two writes above
+read_vals = np.asarray(res.read_vals)
+ok = True
+for t in range(1024):
+    ok &= bool((read_vals[t] == oracle[ra[t]]).all())
+    oracle[wa[t][wm[t]]] = wv[t][wm[t]]
+print(f"1024-cycle replay vs RAM oracle: {'OK' if ok else 'MISMATCH'}; "
+      f"parity path agrees: {bool((res.read_vals == res.parity_vals).all())}\n")
 
 # --- 2. spatial locality of a benchmark ---------------------------------
 for name in ("kmp", "md_knn"):

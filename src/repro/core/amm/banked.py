@@ -6,6 +6,10 @@ differs is timing: concurrent accesses that map to the same bank
 serialize.  ``conflict_cycles`` is the timing model the scheduler uses.
 Multi-pumping doubles the per-cycle port count but halves the maximum
 external frequency (``AMMSpec.frequency_factor``).
+
+``ideal_step`` has a flat whole-trace twin in ``repro.core.amm.replay``
+(one ``lax.scan`` over the op trace, pinned bit-exact by
+``tests/test_replay.py``); keep any semantic change in sync.
 """
 from __future__ import annotations
 

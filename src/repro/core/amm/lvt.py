@@ -8,6 +8,12 @@
 * Remap table: ``n_write + 1`` full-depth banks.  Each incoming write is
   steered to a bank not used by another write this cycle (always possible
   with one spare bank); the remap table tracks the live bank per address.
+
+These are the per-step models (one jit'd dispatch per cycle, ``lax.cond``
+port chains).  ``repro.core.amm.replay`` carries mask-based flat twins of
+both step functions that replay whole traces in one ``lax.scan`` — keep
+any semantic change in sync (``tests/test_replay.py`` pins the two paths
+bit-exact, and the remap bank-steering invariant is tested there too).
 """
 from __future__ import annotations
 

@@ -24,7 +24,6 @@ The central correctness property (tested with hypothesis) is that after
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax
@@ -326,10 +325,13 @@ def _gather_reads(read_fn, state, read_addrs):
     return jax.vmap(lambda a: read_fn(state, a))(read_addrs)
 
 
-@partial(jax.jit, static_argnames=("levels",))
-def h_step(state, read_addrs, write_addrs, write_vals, write_mask, levels=0):
+@jax.jit
+def h_step(state, read_addrs, write_addrs, write_vals, write_mask):
+    if write_addrs.shape[0] != 1:
+        raise ValueError(
+            f"h_ntx_rd has a single write port, got {write_addrs.shape[0]}"
+        )
     vals = _gather_reads(lambda s, a: h_read(s, a), state, read_addrs)
-    # single write port
     state = jax.lax.cond(
         write_mask[0],
         lambda s: h_write(s, write_addrs[0], write_vals[0]),
@@ -364,6 +366,8 @@ def hb_step(state, read_addrs, write_addrs, write_vals, write_mask):
 def make_ntx(spec: AMMSpec, values: jax.Array):
     """Factory: returns (state, fns dict) for the requested NTX design."""
     if spec.kind == "h_ntx_rd":
+        if spec.n_write != 1:
+            raise ValueError("h_ntx_rd supports a single write port")
         state = h_init(values, spec.read_tree_levels)
         return state, {
             "read": h_read,

@@ -1,0 +1,494 @@
+"""Vectorized whole-trace AMM replay engine (scan + vmap).
+
+The per-step functional models in ``ntx.py`` / ``lvt.py`` / ``banked.py``
+are faithful to the paper's RMW flows but are driven one cycle at a time
+from Python, with recursive ``3**k``-leaf pytree state (H-NTX) and
+per-port ``lax.cond`` chains that XLA cannot fuse.  This module replays
+an *entire* op trace in one compiled call:
+
+* Every design's state is flattened to fixed-shape arrays.  The H-NTX
+  ternary tree becomes a ``(3**k, leaf_depth)`` bank matrix plus three
+  precomputed path-index tables (direct leaf, the ``2**k`` write-path
+  leaves, the ``2**k`` parity-reconstruction leaves) — see
+  :class:`HTables`.  LVT / remap / banked / ideal already have flat
+  state; their ``lax.cond`` port chains become mask-based ``where``
+  updates (an XOR write of a masked-to-zero delta is the conditional).
+
+* :func:`replay` runs the whole trace — ``read_addrs [T, R]``,
+  ``write_addrs/vals/mask [T, W]`` — through a single ``jax.lax.scan``
+  and returns the final flat state plus per-cycle direct-path *and*
+  parity-path read values (:class:`ReplayResult`).
+
+* :func:`replay_batched` ``vmap``s the replay across design instances
+  (axis 0 of the state) and, optionally, across independent traces —
+  batched oracle verification of many seeds in one compiled call.
+
+Flat state is interchangeable with the step-path pytree state via
+:func:`flatten_state` / :func:`unflatten_state`; the leaf contents are
+bit-identical on both paths (pinned by ``tests/test_replay.py``), so a
+trace can be replayed, then continued step-by-step, or vice versa.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from functools import lru_cache, partial, reduce
+from typing import Any, Callable, NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amm.spec import AMMSpec
+
+U32 = jnp.uint32
+FlatState = dict[str, jax.Array]
+
+__all__ = [
+    "ReplayResult", "HTables", "h_tables",
+    "init_flat", "flatten_state", "unflatten_state", "peek_flat",
+    "replay", "replay_batched", "make_trace",
+]
+
+
+class ReplayResult(NamedTuple):
+    """Per-cycle outputs of a whole-trace replay.
+
+    ``read_vals``   [T, R] uint32 — direct-path reads (== ``step``'s vals).
+    ``parity_vals`` [T, R] uint32 — XOR-reconstruction-path reads (what the
+                    hardware returns under a bank conflict; equals
+                    ``read_vals`` whenever the design is correct).
+    ``write_banks`` [T, W] int32 or None — for ``remap`` only: the physical
+                    bank each masked write was steered to this cycle
+                    (-1 where the port was idle).  Feeds the
+                    no-two-writes-share-a-bank invariant test.
+    """
+
+    read_vals: jax.Array
+    parity_vals: jax.Array
+    write_banks: jax.Array | None
+
+
+# ======================================================================
+# H-NTX path-index tables
+# ======================================================================
+@dataclasses.dataclass(frozen=True)
+class HTables:
+    """Precomputed leaf-path tables for one H-NTX-Rd tree geometry.
+
+    A tree over ``depth`` words with ``levels=k`` has ``3**k`` leaves of
+    ``leaf_depth = depth >> k`` words, indexed by base-3 digits
+    (0 = b0, 1 = b1, 2 = ref), most-significant level first.  For every
+    logical address ``a``:
+
+    ``direct[a]``        the single leaf the direct read path lands in
+                         (digits = the address's per-level hi/lo bits).
+    ``write_paths[a]``   the ``2**k`` leaves an invariant-maintaining
+                         write touches (each level: own child OR ref).
+    ``parity_paths[a]``  the ``2**k`` leaves whose XOR reconstructs the
+                         word (each level: *other* child OR ref).
+    ``offset[a]``        the word offset inside every one of those leaves.
+    """
+
+    depth: int
+    levels: int
+    leaf_depth: int
+    direct: np.ndarray        # [depth]        int32
+    write_paths: np.ndarray   # [depth, 2**k]  int32
+    parity_paths: np.ndarray  # [depth, 2**k]  int32
+    offset: np.ndarray        # [depth]        int32
+
+
+@lru_cache(maxsize=None)
+def h_tables(depth: int, levels: int) -> HTables:
+    k = levels
+    addrs = np.arange(depth, dtype=np.int64)
+    off = addrs.copy()
+    bits = np.zeros((depth, k), np.int64)
+    cur = depth
+    for lvl in range(k):
+        half = cur // 2
+        hi = (off >= half).astype(np.int64)
+        bits[:, lvl] = hi
+        off -= hi * half
+        cur = half
+    w3 = 3 ** np.arange(k - 1, -1, -1, dtype=np.int64)  # MSB level first
+    direct = bits @ w3
+    n_paths = 1 << k
+    write_paths = np.zeros((depth, n_paths), np.int64)
+    parity_paths = np.zeros((depth, n_paths), np.int64)
+    for j, choice in enumerate(itertools.product((0, 1), repeat=k)):
+        c = np.asarray(choice, np.int64)  # 1 = take the ref branch
+        write_paths[:, j] = np.where(c, 2, bits) @ w3
+        parity_paths[:, j] = np.where(c, 2, 1 - bits) @ w3
+    return HTables(depth, k, depth >> k, direct.astype(np.int32),
+                   write_paths.astype(np.int32),
+                   parity_paths.astype(np.int32), off.astype(np.int32))
+
+
+def _h_direct(tb: HTables, banks: jax.Array, addr: jax.Array) -> jax.Array:
+    """Direct-path read; ``addr`` may be scalar or [R]."""
+    d = jnp.asarray(tb.direct)[addr]
+    o = jnp.asarray(tb.offset)[addr]
+    return banks[d, o]
+
+
+def _h_parity(tb: HTables, banks: jax.Array, addr: jax.Array) -> jax.Array:
+    """Reconstruction-path read: XOR of the 2**k parity-path leaves."""
+    rows = jnp.asarray(tb.parity_paths)[addr]          # [..., 2**k]
+    o = jnp.asarray(tb.offset)[addr]
+    leaves = banks[rows, o[..., None]]                 # [..., 2**k]
+    return reduce(jnp.bitwise_xor,
+                  [leaves[..., j] for j in range(rows.shape[-1])])
+
+
+def _h_xor_write(tb: HTables, banks: jax.Array, addr: jax.Array,
+                 delta: jax.Array) -> jax.Array:
+    """XOR ``delta`` into every write-path leaf of ``addr``.
+
+    Because ``ref = b0 ^ b1`` holds at every level, a logical write of
+    value ``v`` is exactly ``delta = v ^ old`` XORed into the write-path
+    leaves — and a masked-off write is ``delta = 0`` (XOR identity), so
+    no ``lax.cond`` is needed.  The rows of one path set are distinct,
+    so the scatter is deterministic.
+    """
+    rows = jnp.asarray(tb.write_paths)[addr]           # [2**k]
+    o = jnp.asarray(tb.offset)[addr]
+    return banks.at[rows, o].set(banks[rows, o] ^ delta)
+
+
+def _h_set_write(tb: HTables, banks: jax.Array, addr: jax.Array,
+                 value: jax.Array, mask: jax.Array) -> jax.Array:
+    delta = jnp.where(mask, value ^ _h_direct(tb, banks, addr), U32(0))
+    return _h_xor_write(tb, banks, addr, delta)
+
+
+# ======================================================================
+# Flat per-cycle step functions (scan bodies)
+# ======================================================================
+def _split(addr: jax.Array, half: int) -> tuple[jax.Array, jax.Array]:
+    hi = addr >= half
+    return hi, addr - jnp.where(hi, half, 0)
+
+
+def _h_step(tb: HTables, state: FlatState, ra, wa, wv, wm):
+    banks = state["banks"]
+    vals = _h_direct(tb, banks, ra)
+    parity = _h_parity(tb, banks, ra)
+    banks = _h_set_write(tb, banks, wa[0], wv[0].astype(U32), wm[0])
+    return {"banks": banks}, (vals, parity, None)
+
+
+def _b_step(half: int, state: FlatState, ra, wa, wv, wm):
+    s0, s1, ref = state["s0"], state["s1"], state["ref"]
+    hi, off = _split(ra, half)
+    enc = jnp.where(hi, s1[off], s0[off])
+    vals = enc ^ ref[off]
+    # write port 0: plain encoded write into its half
+    hi0, off0 = _split(wa[0], half)
+    enc0 = wv[0].astype(U32) ^ ref[off0]
+    s0 = s0.at[off0].set(jnp.where(wm[0] & ~hi0, enc0, s0[off0]))
+    s1 = s1.at[off0].set(jnp.where(wm[0] & hi0, enc0, s1[off0]))
+    # write port 1: plain if it lands in the other bank, else the paper's
+    # Ref re-pointing RMW sequence
+    hi1, off1 = _split(wa[1], half)
+    conflict = wm[1] & wm[0] & (hi0 == hi1)
+    plain = wm[1] & ~(wm[0] & (hi0 == hi1))
+    enc1 = wv[1].astype(U32) ^ ref[off1]
+    t = jnp.where(hi1, s0[off1], s1[off1]) ^ ref[off1]
+    new_ref = wv[1].astype(U32) ^ jnp.where(hi1, s1[off1], s0[off1])
+    m_s0 = (plain & ~hi1) | (conflict & hi1)
+    v_s0 = jnp.where(conflict & hi1, new_ref ^ t, enc1)
+    m_s1 = (plain & hi1) | (conflict & ~hi1)
+    v_s1 = jnp.where(conflict & ~hi1, new_ref ^ t, enc1)
+    s0 = s0.at[off1].set(jnp.where(m_s0, v_s0, s0[off1]))
+    s1 = s1.at[off1].set(jnp.where(m_s1, v_s1, s1[off1]))
+    ref = ref.at[off1].set(jnp.where(conflict, new_ref, ref[off1]))
+    return {"s0": s0, "s1": s1, "ref": ref}, (vals, vals, None)
+
+
+def _hb_step(tb: HTables, half: int, state: FlatState, ra, wa, wv, wm):
+    s0, s1, ref = state["s0"], state["s1"], state["ref"]
+    hi, off = _split(ra, half)
+    vals = jnp.where(hi, _h_direct(tb, s1, off), _h_direct(tb, s0, off)) \
+        ^ _h_direct(tb, ref, off)
+    parity = jnp.where(hi, _h_parity(tb, s1, off), _h_parity(tb, s0, off)) \
+        ^ _h_parity(tb, ref, off)
+    # write port 0
+    hi0, off0 = _split(wa[0], half)
+    enc0 = wv[0].astype(U32) ^ _h_direct(tb, ref, off0)
+    s0 = _h_set_write(tb, s0, off0, enc0, wm[0] & ~hi0)
+    s1 = _h_set_write(tb, s1, off0, enc0, wm[0] & hi0)
+    # write port 1
+    hi1, off1 = _split(wa[1], half)
+    conflict = wm[1] & wm[0] & (hi0 == hi1)
+    plain = wm[1] & ~(wm[0] & (hi0 == hi1))
+    enc1 = wv[1].astype(U32) ^ _h_direct(tb, ref, off1)
+    t = jnp.where(hi1, _h_direct(tb, s0, off1), _h_direct(tb, s1, off1)) \
+        ^ _h_direct(tb, ref, off1)
+    new_ref = wv[1].astype(U32) ^ jnp.where(
+        hi1, _h_direct(tb, s1, off1), _h_direct(tb, s0, off1))
+    m_s0 = (plain & ~hi1) | (conflict & hi1)
+    v_s0 = jnp.where(conflict & hi1, new_ref ^ t, enc1)
+    m_s1 = (plain & hi1) | (conflict & ~hi1)
+    v_s1 = jnp.where(conflict & ~hi1, new_ref ^ t, enc1)
+    s0 = _h_set_write(tb, s0, off1, v_s0, m_s0)
+    s1 = _h_set_write(tb, s1, off1, v_s1, m_s1)
+    ref = _h_set_write(tb, ref, off1, new_ref, conflict)
+    return {"s0": s0, "s1": s1, "ref": ref}, (vals, parity, None)
+
+
+def _lvt_step(n_write: int, state: FlatState, ra, wa, wv, wm):
+    banks, lvt = state["banks"], state["lvt"]
+    vals = banks[lvt[ra], ra]
+    for p in range(n_write):  # ports resolve in order; later port wins
+        a = wa[p]
+        banks = banks.at[p, a].set(
+            jnp.where(wm[p], wv[p].astype(U32), banks[p, a]))
+        lvt = lvt.at[a].set(jnp.where(wm[p], jnp.int32(p), lvt[a]))
+    return {"banks": banks, "lvt": lvt}, (vals, vals, None)
+
+
+def _remap_step(n_banks: int, state: FlatState, ra, wa, wv, wm):
+    banks, table = state["banks"], state["map"]
+    vals = banks[table[ra], ra]
+    used = jnp.zeros((n_banks,), bool)
+    chosen = []
+    for p in range(wa.shape[0]):
+        a, v, m = wa[p], wv[p], wm[p]
+        # first bank, scanning from the preferred one, not used this cycle
+        order = (table[a] + jnp.arange(n_banks)) % n_banks
+        bank = order[jnp.argmax(jnp.logical_not(used[order]))]
+        banks = banks.at[bank, a].set(jnp.where(m, v.astype(U32),
+                                                banks[bank, a]))
+        table = table.at[a].set(jnp.where(m, bank, table[a]))
+        used = used.at[bank].set(used[bank] | m)
+        chosen.append(jnp.where(m, bank, jnp.int32(-1)))
+    return ({"banks": banks, "map": table},
+            (vals, vals, jnp.stack(chosen)))
+
+
+def _ideal_step(state: FlatState, ra, wa, wv, wm):
+    mem = state["mem"]
+    vals = mem[ra]
+    for p in range(wa.shape[0]):  # later ports win, like LVT order
+        mem = mem.at[wa[p]].set(
+            jnp.where(wm[p], wv[p].astype(U32), mem[wa[p]]))
+    return {"mem": mem}, (vals, vals, None)
+
+
+def _step_fn(spec: AMMSpec) -> Callable:
+    if spec.kind == "h_ntx_rd":
+        return partial(_h_step, h_tables(spec.depth, spec.read_tree_levels))
+    if spec.kind == "b_ntx_wr":
+        return partial(_b_step, spec.depth // 2)
+    if spec.kind == "hb_ntx":
+        return partial(_hb_step,
+                       h_tables(spec.depth // 2, spec.read_tree_levels),
+                       spec.depth // 2)
+    if spec.kind == "lvt":
+        return partial(_lvt_step, spec.n_write)
+    if spec.kind == "remap":
+        return partial(_remap_step, spec.n_write + 1)
+    if spec.kind in ("ideal", "banked", "multipump"):
+        return _ideal_step
+    raise ValueError(f"unknown design kind: {spec.kind}")
+
+
+# ======================================================================
+# Flat state construction / conversion
+# ======================================================================
+def _h_encode(values: np.ndarray | jax.Array, levels: int) -> jax.Array:
+    """Canonical leaf matrix for logical content ``values``: recursively
+    stack [encode(lo), encode(hi), encode(lo ^ hi)] (b0/b1/ref order)."""
+    values = jnp.asarray(values, U32)
+    if levels == 0:
+        return values[None, :]
+    half = values.shape[0] // 2
+    lo, hi = values[:half], values[half:]
+    return jnp.concatenate([_h_encode(lo, levels - 1),
+                            _h_encode(hi, levels - 1),
+                            _h_encode(lo ^ hi, levels - 1)])
+
+
+def init_flat(spec: AMMSpec, values: jax.Array | None = None) -> FlatState:
+    """Flat initial state holding logical content ``values`` (zeros if None)."""
+    if values is None:
+        values = jnp.zeros((spec.depth,), U32)
+    values = jnp.asarray(values, U32)
+    if values.shape != (spec.depth,):
+        raise ValueError(f"init values must be [{spec.depth}]")
+    k = spec.read_tree_levels
+    if spec.kind == "h_ntx_rd":
+        return {"banks": _h_encode(values, k)}
+    if spec.kind == "b_ntx_wr":
+        half = spec.depth // 2
+        return {"s0": values[:half], "s1": values[half:],
+                "ref": jnp.zeros((half,), U32)}
+    if spec.kind == "hb_ntx":
+        half = spec.depth // 2
+        return {"s0": _h_encode(values[:half], k),
+                "s1": _h_encode(values[half:], k),
+                "ref": _h_encode(jnp.zeros((half,), U32), k)}
+    if spec.kind == "lvt":
+        return {"banks": jnp.tile(values[None, :], (spec.n_write, 1)),
+                "lvt": jnp.zeros((spec.depth,), jnp.int32)}
+    if spec.kind == "remap":
+        return {"banks": jnp.tile(values[None, :], (spec.n_write + 1, 1)),
+                "map": jnp.zeros((spec.depth,), jnp.int32)}
+    if spec.kind in ("ideal", "banked", "multipump"):
+        return {"mem": values}
+    raise ValueError(f"unknown design kind: {spec.kind}")
+
+
+def _h_flatten(node: dict) -> jax.Array:
+    if "leaf" in node:
+        return node["leaf"][None, :]
+    return jnp.concatenate([_h_flatten(node["b0"]), _h_flatten(node["b1"]),
+                            _h_flatten(node["ref"])])
+
+
+def _h_unflatten(banks: jax.Array) -> dict:
+    if banks.shape[0] == 1:
+        return {"leaf": banks[0]}
+    third = banks.shape[0] // 3
+    return {"b0": _h_unflatten(banks[:third]),
+            "b1": _h_unflatten(banks[third:2 * third]),
+            "ref": _h_unflatten(banks[2 * third:])}
+
+
+def flatten_state(spec: AMMSpec, state: Any) -> FlatState:
+    """Step-path pytree state -> flat replay state (bit-identical leaves)."""
+    if spec.kind == "h_ntx_rd":
+        return {"banks": _h_flatten(state)}
+    if spec.kind == "hb_ntx":
+        return {"s0": _h_flatten(state["s0"]), "s1": _h_flatten(state["s1"]),
+                "ref": _h_flatten(state["ref"])}
+    return dict(state)  # b_ntx_wr / lvt / remap / ideal are already flat
+
+
+def unflatten_state(spec: AMMSpec, flat: FlatState) -> Any:
+    """Flat replay state -> step-path pytree state."""
+    if spec.kind == "h_ntx_rd":
+        return _h_unflatten(flat["banks"])
+    if spec.kind == "hb_ntx":
+        return {"s0": _h_unflatten(flat["s0"]),
+                "s1": _h_unflatten(flat["s1"]),
+                "ref": _h_unflatten(flat["ref"])}
+    return dict(flat)
+
+
+def peek_flat(spec: AMMSpec, flat: FlatState) -> jax.Array:
+    """Decode the full logical array from a flat state."""
+    if spec.kind == "h_ntx_rd":
+        tb = h_tables(spec.depth, spec.read_tree_levels)
+        idx = jnp.arange(spec.depth)
+        return _h_direct(tb, flat["banks"], idx)
+    if spec.kind == "b_ntx_wr":
+        return jnp.concatenate([flat["s0"] ^ flat["ref"],
+                                flat["s1"] ^ flat["ref"]])
+    if spec.kind == "hb_ntx":
+        tb = h_tables(spec.depth // 2, spec.read_tree_levels)
+        idx = jnp.arange(spec.depth // 2)
+        ref = _h_direct(tb, flat["ref"], idx)
+        return jnp.concatenate([_h_direct(tb, flat["s0"], idx) ^ ref,
+                                _h_direct(tb, flat["s1"], idx) ^ ref])
+    if spec.kind == "lvt":
+        idx = jnp.arange(flat["lvt"].shape[0])
+        return flat["banks"][flat["lvt"][idx], idx]
+    if spec.kind == "remap":
+        idx = jnp.arange(flat["map"].shape[0])
+        return flat["banks"][flat["map"][idx], idx]
+    return flat["mem"]
+
+
+# ======================================================================
+# Whole-trace replay
+# ======================================================================
+def _replay_impl(spec: AMMSpec, state: FlatState, read_addrs, write_addrs,
+                 write_vals, write_mask):
+    step = _step_fn(spec)
+
+    def body(st, xs):
+        ra, wa, wv, wm = xs
+        return step(st, ra, wa, wv, wm)
+
+    state, (vals, parity, aux) = jax.lax.scan(
+        body, state, (read_addrs, write_addrs, write_vals, write_mask))
+    return state, ReplayResult(vals, parity, aux)
+
+
+@lru_cache(maxsize=None)
+def _replay_jit(spec: AMMSpec) -> Callable:
+    return jax.jit(partial(_replay_impl, spec))
+
+
+@lru_cache(maxsize=None)
+def _replay_vmap(spec: AMMSpec, share_trace: bool) -> Callable:
+    trace_ax = None if share_trace else 0
+    return jax.jit(jax.vmap(partial(_replay_impl, spec),
+                            in_axes=(0,) + (trace_ax,) * 4))
+
+
+def _as_ops(read_addrs, write_addrs, write_vals, write_mask):
+    return (jnp.asarray(read_addrs, jnp.int32),
+            jnp.asarray(write_addrs, jnp.int32),
+            jnp.asarray(write_vals, U32),
+            jnp.asarray(write_mask, bool))
+
+
+def replay(spec: AMMSpec, state: FlatState, read_addrs, write_addrs,
+           write_vals, write_mask) -> tuple[FlatState, ReplayResult]:
+    """Replay a whole op trace through one compiled ``lax.scan``.
+
+    Args:
+      state: flat state from :func:`init_flat` / :func:`flatten_state`.
+      read_addrs:  [T, n_read]  int32.
+      write_addrs: [T, n_write] int32.
+      write_vals:  [T, n_write] uint32.
+      write_mask:  [T, n_write] bool.
+
+    Returns ``(final_state, ReplayResult)``; reads are served before
+    writes within each cycle, exactly like the per-step path.
+    """
+    return _replay_jit(spec)(
+        state, *_as_ops(read_addrs, write_addrs, write_vals, write_mask))
+
+
+def replay_batched(spec: AMMSpec, states: FlatState, read_addrs, write_addrs,
+                   write_vals, write_mask, share_trace: bool = False
+                   ) -> tuple[FlatState, ReplayResult]:
+    """``vmap``-batched :func:`replay` across design instances.
+
+    ``states`` carries a leading batch axis on every array (stack
+    :func:`init_flat` results with ``jax.tree.map``).  With
+    ``share_trace=False`` the four trace arrays are [B, T, ...] — one
+    independent trace per instance (e.g. per random seed); with
+    ``share_trace=True`` a single [T, ...] trace is broadcast to all
+    instances (e.g. one request stream against many design points).
+    """
+    return _replay_vmap(spec, share_trace)(
+        states, *_as_ops(read_addrs, write_addrs, write_vals, write_mask))
+
+
+def make_trace(spec: AMMSpec, n_cycles: int, seed: int = 0,
+               write_prob: float = 0.5,
+               rng: np.random.Generator | None = None):
+    """Random op trace in replay layout (numpy; handy for tests/benchmarks).
+
+    Pass ``rng`` to draw from an existing generator instead of ``seed``.
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    ra = rng.integers(0, spec.depth, (n_cycles, spec.n_read)).astype(np.int32)
+    wa = rng.integers(0, spec.depth, (n_cycles, spec.n_write)).astype(np.int32)
+    wv = rng.integers(0, 2**32, (n_cycles, spec.n_write), dtype=np.uint32)
+    wm = rng.random((n_cycles, spec.n_write)) < write_prob
+    return ra, wa, wv, wm
+
+
+def spec_seed(spec: AMMSpec, salt: str = "") -> int:
+    """Stable per-spec RNG seed (unlike ``hash()``, identical across runs)."""
+    import zlib
+    return zlib.crc32((salt + spec.describe()).encode())

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core.amm import banked as _banked
 from repro.core.amm import lvt as _lvt
 from repro.core.amm import ntx as _ntx
+from repro.core.amm import replay as _replay
 from repro.core.amm.spec import AMMSpec
 
 __all__ = ["AMMSim", "make_amm"]
@@ -22,12 +23,35 @@ __all__ = ["AMMSim", "make_amm"]
 
 @dataclasses.dataclass
 class AMMSim:
+    """Uniform wrapper over one design's pure-JAX state machine.
+
+    Two simulation paths share the same state:
+
+    * per-step — ``state, vals = sim.step(state, ra, wa, wv, wm)`` advances
+      one cycle (interactive use, incremental drivers);
+    * whole-trace — ``state, result = sim.replay(state, ra[T], wa[T], wv[T],
+      wm[T])`` replays T cycles in one compiled ``lax.scan``
+      (:mod:`repro.core.amm.replay`), returning direct- and parity-path
+      reads for every cycle.  Both paths are pinned bit-exact.
+    """
+
     spec: AMMSpec
     state: Any
     read: Callable
     read_parity: Callable
     step: Callable
     peek: Callable
+    replay: Callable
+
+
+def _make_replay(spec: AMMSpec) -> Callable:
+    """Whole-trace replay operating on the step-path (pytree) state."""
+    def run(state, read_addrs, write_addrs, write_vals, write_mask):
+        flat = _replay.flatten_state(spec, state)
+        flat, result = _replay.replay(spec, flat, read_addrs, write_addrs,
+                                      write_vals, write_mask)
+        return _replay.unflatten_state(spec, flat), result
+    return run
 
 
 def make_amm(spec: AMMSpec, values: jax.Array | None = None) -> AMMSim:
@@ -37,20 +61,21 @@ def make_amm(spec: AMMSpec, values: jax.Array | None = None) -> AMMSim:
     if values.shape != (spec.depth,):
         raise ValueError(f"init values must be [{spec.depth}]")
 
+    run = _make_replay(spec)
     if spec.kind in ("h_ntx_rd", "b_ntx_wr", "hb_ntx"):
         state, fns = _ntx.make_ntx(spec, values)
         return AMMSim(spec, state, fns["read"], fns["read_parity"],
-                      fns["step"], fns["peek"])
+                      fns["step"], fns["peek"], run)
     if spec.kind == "lvt":
         state = _lvt.lvt_init(spec, values)
         return AMMSim(spec, state, _lvt.lvt_read, _lvt.lvt_read,
-                      _lvt.lvt_step, _lvt.lvt_peek)
+                      _lvt.lvt_step, _lvt.lvt_peek, run)
     if spec.kind == "remap":
         state = _lvt.remap_init(spec, values)
         return AMMSim(spec, state, _lvt.remap_read, _lvt.remap_read,
-                      _lvt.remap_step, _lvt.remap_peek)
+                      _lvt.remap_step, _lvt.remap_peek, run)
     if spec.kind in ("ideal", "banked", "multipump"):
         state = _banked.ideal_init(spec, values)
         return AMMSim(spec, state, _banked.ideal_read, _banked.ideal_read,
-                      _banked.ideal_step, _banked.ideal_peek)
+                      _banked.ideal_step, _banked.ideal_peek, run)
     raise ValueError(f"unknown design kind: {spec.kind}")

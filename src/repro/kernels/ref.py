@@ -11,6 +11,46 @@ def amm_gather_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
     return jnp.take(table, idx, axis=0)
 
 
+_UINT_FOR = {2: jnp.uint16, 4: jnp.uint32}
+
+
+def amm_gather_replay_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
+    """Replay-backed oracle for ``amm_gather``: the gather is an op trace
+    on the H-NTX-Rd *functional model* (``repro.core.amm.replay``),
+    batched with vmap across the payload columns — one AMM instance per
+    column, all replaying the same request stream in a single scan.
+
+    Requests are paired two per cycle (the kernel's 2 read ports): even
+    slots decode through the direct path, odd slots through the
+    XOR-reconstruction (parity) path, exactly like the kernel's
+    conflict-free second port.  table: [V, D]; idx: [N] -> [N, D].
+    """
+    from repro.core.amm.replay import init_flat, replay_batched
+    from repro.core.amm.spec import AMMSpec
+
+    v, d = table.shape
+    u = _UINT_FOR[table.dtype.itemsize]
+    cols = jax.lax.bitcast_convert_type(table, u).astype(jnp.uint32).T  # [D,V]
+    spec = AMMSpec("h_ntx_rd", n_read=2, n_write=1, depth=v)
+    states = jax.vmap(lambda c: init_flat(spec, c))(cols)
+
+    n = idx.shape[0]
+    padded = jnp.concatenate([idx.astype(jnp.int32),
+                              jnp.zeros((n % 2,), jnp.int32)])
+    cycles = padded.shape[0] // 2
+    ra = padded.reshape(cycles, 2)
+    wa = jnp.zeros((cycles, 1), jnp.int32)
+    wv = jnp.zeros((cycles, 1), jnp.uint32)
+    wm = jnp.zeros((cycles, 1), bool)
+    _, result = replay_batched(spec, states, ra, wa, wv, wm, share_trace=True)
+
+    # [D, T, 2]: keep direct reads from even slots, parity from odd slots
+    slots = jnp.stack([result.read_vals[..., 0], result.parity_vals[..., 1]],
+                      axis=-1)
+    flat = slots.reshape(d, cycles * 2)[:, :n].T            # [N, D]
+    return jax.lax.bitcast_convert_type(flat.astype(u), table.dtype)
+
+
 def kv_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                   lengths: jax.Array) -> jax.Array:
     """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; lengths: [B] -> [B, Hq, D]."""

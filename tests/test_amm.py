@@ -1,7 +1,11 @@
 """Property tests: every AMM design must be semantically identical to an
 ideal multiport RAM under arbitrary op sequences (the paper's core
 correctness claim for algorithmic multi-porting), with the XOR parity
-path agreeing with the direct path at every step."""
+path agreeing with the direct path at every cycle.
+
+Whole traces are replayed in one compiled call through ``sim.replay``
+(the ``lax.scan`` engine in ``repro.core.amm.replay``); the per-step
+path is pinned bit-exact against it in ``tests/test_replay.py``."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -25,6 +29,49 @@ SPECS = [
 ]
 
 
+def ram_oracle(init, ra, wa, wv, wm):
+    """Cycle-by-cycle numpy RAM reference: returns (per-cycle reads, mem)."""
+    mem = init.copy()
+    reads = np.empty(ra.shape, np.uint32)
+    for t in range(ra.shape[0]):
+        reads[t] = mem[ra[t]]
+        for p in range(wa.shape[1]):
+            if wm[t, p]:
+                mem[wa[t, p]] = wv[t, p]
+    return reads, mem
+
+
+def random_trace(spec, n_cycles, rng):
+    from repro.core.amm.replay import make_trace
+    return make_trace(spec, n_cycles, rng=rng)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_amm_matches_ram_oracle(spec):
+    from repro.core.amm.replay import spec_seed
+    rng = np.random.default_rng(spec_seed(spec))
+    init = rng.integers(0, 2**32, DEPTH, dtype=np.uint32)
+    ra, wa, wv, wm = random_trace(spec, 25, rng)
+    want_reads, want_mem = ram_oracle(init, ra, wa, wv, wm)
+
+    sim = make_amm(spec, jnp.asarray(init))
+    state, result = sim.replay(sim.state, ra, wa, wv, wm)
+    np.testing.assert_array_equal(np.asarray(result.read_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(result.parity_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(sim.peek(state)), want_mem)
+    a = int(rng.integers(0, DEPTH))
+    assert int(sim.read(state, jnp.int32(a))) == int(want_mem[a])
+    assert int(sim.read_parity(state, jnp.int32(a))) == int(want_mem[a])
+
+
+def _ops_to_arrays(ops):
+    ra = np.asarray([reads for reads, _ in ops], np.int32)
+    wa = np.asarray([[w[0] for w in writes] for _, writes in ops], np.int32)
+    wv = np.asarray([[w[1] for w in writes] for _, writes in ops], np.uint32)
+    wm = np.asarray([[w[2] for w in writes] for _, writes in ops], bool)
+    return ra, wa, wv, wm
+
+
 def ops_strategy(spec: AMMSpec, n_steps: int = 12):
     step = st.tuples(
         st.lists(st.integers(0, DEPTH - 1), min_size=spec.n_read,
@@ -36,71 +83,31 @@ def ops_strategy(spec: AMMSpec, n_steps: int = 12):
     return st.lists(step, min_size=1, max_size=n_steps)
 
 
-@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
-def test_amm_matches_ram_oracle(spec):
-    rng = np.random.default_rng(hash(spec.describe()) % 2**31)
-    init = rng.integers(0, 2**32, DEPTH, dtype=np.uint32)
-    sim = make_amm(spec, jnp.asarray(init))
-    state = sim.state
-    oracle = init.copy()
-    for t in range(25):
-        ra = rng.integers(0, DEPTH, spec.n_read).astype(np.int32)
-        wa = rng.integers(0, DEPTH, spec.n_write).astype(np.int32)
-        wv = rng.integers(0, 2**32, spec.n_write, dtype=np.uint32)
-        wm = rng.integers(0, 2, spec.n_write).astype(bool)
-        state, vals = sim.step(state, jnp.asarray(ra), jnp.asarray(wa),
-                               jnp.asarray(wv), jnp.asarray(wm))
-        np.testing.assert_array_equal(np.asarray(vals), oracle[ra])
-        for p in range(spec.n_write):
-            if wm[p]:
-                oracle[wa[p]] = wv[p]
-        np.testing.assert_array_equal(np.asarray(sim.peek(state)), oracle)
-        a = int(rng.integers(0, DEPTH))
-        assert int(sim.read(state, jnp.int32(a))) == int(oracle[a])
-        assert int(sim.read_parity(state, jnp.int32(a))) == int(oracle[a])
-
-
 @settings(max_examples=20, deadline=None)
 @given(data=st.data())
 def test_hb_ntx_hypothesis(data):
     spec = AMMSpec("hb_ntx", 4, 2, DEPTH)
-    ops = data.draw(ops_strategy(spec))
+    ra, wa, wv, wm = _ops_to_arrays(data.draw(ops_strategy(spec)))
+    want_reads, want_mem = ram_oracle(np.zeros(DEPTH, np.uint32),
+                                      ra, wa, wv, wm)
     sim = make_amm(spec)
-    state = sim.state
-    oracle = np.zeros(DEPTH, np.uint32)
-    for reads, writes in ops:
-        ra = jnp.asarray(reads, jnp.int32)
-        wa = jnp.asarray([w[0] for w in writes], jnp.int32)
-        wv = jnp.asarray([w[1] for w in writes], jnp.uint32)
-        wm = jnp.asarray([w[2] for w in writes])
-        state, vals = sim.step(state, ra, wa, wv, wm)
-        np.testing.assert_array_equal(np.asarray(vals), oracle[np.asarray(reads)])
-        for a, v, m in writes:
-            if m:
-                oracle[a] = v
-    np.testing.assert_array_equal(np.asarray(sim.peek(state)), oracle)
+    state, result = sim.replay(sim.state, ra, wa, wv, wm)
+    np.testing.assert_array_equal(np.asarray(result.read_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(result.parity_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(sim.peek(state)), want_mem)
 
 
 @settings(max_examples=20, deadline=None)
 @given(data=st.data())
 def test_lvt_hypothesis(data):
     spec = AMMSpec("lvt", 2, 3, DEPTH)
-    ops = data.draw(ops_strategy(spec))
+    ra, wa, wv, wm = _ops_to_arrays(data.draw(ops_strategy(spec)))
+    want_reads, want_mem = ram_oracle(np.zeros(DEPTH, np.uint32),
+                                      ra, wa, wv, wm)
     sim = make_amm(spec)
-    state = sim.state
-    oracle = np.zeros(DEPTH, np.uint32)
-    for reads, writes in ops:
-        state, vals = sim.step(
-            state, jnp.asarray(reads, jnp.int32),
-            jnp.asarray([w[0] for w in writes], jnp.int32),
-            jnp.asarray([w[1] for w in writes], jnp.uint32),
-            jnp.asarray([w[2] for w in writes]))
-        np.testing.assert_array_equal(np.asarray(vals),
-                                      oracle[np.asarray(reads)])
-        for a, v, m in writes:
-            if m:
-                oracle[a] = v
-    np.testing.assert_array_equal(np.asarray(sim.peek(state)), oracle)
+    state, result = sim.replay(sim.state, ra, wa, wv, wm)
+    np.testing.assert_array_equal(np.asarray(result.read_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(sim.peek(state)), want_mem)
 
 
 def test_spec_formulas():
@@ -124,3 +131,15 @@ def test_spec_validation():
         AMMSpec("b_ntx_wr", 1, 3, 64)           # B gives exactly 2W
     with pytest.raises(ValueError):
         AMMSpec("h_ntx_rd", 2, 1, 63)           # depth not divisible
+    with pytest.raises(ValueError):
+        AMMSpec("h_ntx_rd", 2, 2, 64)           # single write port only
+
+
+def test_h_step_rejects_multi_write():
+    """h_step must not silently drop write ports beyond port 0."""
+    from repro.core.amm import ntx
+    sim = make_amm(AMMSpec("h_ntx_rd", 2, 1, DEPTH))
+    with pytest.raises(ValueError):
+        ntx.h_step(sim.state, jnp.zeros((2,), jnp.int32),
+                   jnp.zeros((2,), jnp.int32), jnp.zeros((2,), jnp.uint32),
+                   jnp.ones((2,), bool))

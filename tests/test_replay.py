@@ -1,0 +1,140 @@
+"""Pinning tests for the whole-trace replay engine
+(``repro.core.amm.replay``): for every design the scanned replay must be
+bit-exact with the per-step path AND the plain-RAM oracle — read values
+(direct and parity paths), final logical content, and the flat leaf/bank
+state itself — under jit (replay is always jit-compiled) and under vmap
+batching across instances and seeds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.amm import AMMSpec, make_amm
+from repro.core.amm import replay as rp
+from test_amm import DEPTH, SPECS, ram_oracle, random_trace
+
+T = 12
+
+
+def _trace(spec, seed, n_cycles=T):
+    return random_trace(spec, n_cycles, np.random.default_rng(seed))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_replay_bit_exact_with_step_path(spec):
+    rng = np.random.default_rng(rp.spec_seed(spec, salt="replay"))
+    init = rng.integers(0, 2**32, DEPTH, dtype=np.uint32)
+    ra, wa, wv, wm = random_trace(spec, T, rng)
+    want_reads, want_mem = ram_oracle(init, ra, wa, wv, wm)
+
+    # per-step path (pytree state, one jit'd dispatch per cycle)
+    sim = make_amm(spec, jnp.asarray(init))
+    state = sim.state
+    step_vals = []
+    for t in range(T):
+        state, vals = sim.step(state, jnp.asarray(ra[t]), jnp.asarray(wa[t]),
+                               jnp.asarray(wv[t]), jnp.asarray(wm[t]))
+        step_vals.append(np.asarray(vals))
+
+    # whole-trace path (flat state, one scan)
+    flat = rp.init_flat(spec, jnp.asarray(init))
+    flat, result = rp.replay(spec, flat, ra, wa, wv, wm)
+
+    np.testing.assert_array_equal(np.asarray(result.read_vals),
+                                  np.stack(step_vals))
+    np.testing.assert_array_equal(np.asarray(result.read_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(result.parity_vals), want_reads)
+    np.testing.assert_array_equal(np.asarray(rp.peek_flat(spec, flat)),
+                                  want_mem)
+    # the flat state itself is bit-identical to the flattened step state,
+    # so the two paths are interchangeable mid-sequence
+    step_flat = rp.flatten_state(spec, state)
+    assert set(step_flat) == set(flat)
+    for key in flat:
+        np.testing.assert_array_equal(np.asarray(step_flat[key]),
+                                      np.asarray(flat[key]), err_msg=key)
+    # and unflatten() round-trips back into the step path
+    resumed = rp.unflatten_state(spec, flat)
+    np.testing.assert_array_equal(np.asarray(sim.peek(resumed)), want_mem)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_replay_vmap_instances_and_seeds(spec):
+    """vmap across B (init values, trace seed) pairs == B solo replays."""
+    B = 3
+    rng = np.random.default_rng(rp.spec_seed(spec, salt="vmap"))
+    inits = rng.integers(0, 2**32, (B, DEPTH), dtype=np.uint32)
+    traces = [_trace(spec, seed) for seed in range(B)]
+    ra, wa, wv, wm = (np.stack([tr[i] for tr in traces]) for i in range(4))
+
+    states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[rp.init_flat(spec, jnp.asarray(v)) for v in inits])
+    states, batched = rp.replay_batched(spec, states, ra, wa, wv, wm)
+
+    for b in range(B):
+        want_reads, want_mem = ram_oracle(inits[b], ra[b], wa[b], wv[b], wm[b])
+        np.testing.assert_array_equal(np.asarray(batched.read_vals[b]),
+                                      want_reads)
+        np.testing.assert_array_equal(np.asarray(batched.parity_vals[b]),
+                                      want_reads)
+        solo = jax.tree.map(lambda x: x[b], states)
+        np.testing.assert_array_equal(np.asarray(rp.peek_flat(spec, solo)),
+                                      want_mem)
+
+
+def test_replay_shared_trace_broadcast():
+    """share_trace=True: one op stream against many design instances."""
+    spec = AMMSpec("hb_ntx", 4, 2, DEPTH)
+    B = 4
+    rng = np.random.default_rng(11)
+    inits = rng.integers(0, 2**32, (B, DEPTH), dtype=np.uint32)
+    ra, wa, wv, wm = _trace(spec, seed=5)
+    states = jax.tree.map(lambda *xs: jnp.stack(xs),
+                          *[rp.init_flat(spec, jnp.asarray(v)) for v in inits])
+    _, batched = rp.replay_batched(spec, states, ra, wa, wv, wm,
+                                   share_trace=True)
+    for b in range(B):
+        want_reads, _ = ram_oracle(inits[b], ra, wa, wv, wm)
+        np.testing.assert_array_equal(np.asarray(batched.read_vals[b]),
+                                      want_reads)
+
+
+@pytest.mark.parametrize("n_write", [2, 3, 4])
+def test_remap_no_bank_sharing_invariant(n_write):
+    """The remap table's "always one spare bank" claim: within any cycle,
+    no two live (masked) writes may ever be steered to the same physical
+    bank — n_write + 1 banks guarantee a free one for every port."""
+    spec = AMMSpec("remap", 2, n_write, DEPTH)
+    for seed in range(4):
+        ra, wa, wv, wm = _trace(spec, seed, n_cycles=40)
+        flat = rp.init_flat(spec)
+        _, result = rp.replay(spec, flat, ra, wa, wv, wm)
+        banks = np.asarray(result.write_banks)          # [T, W]
+        assert banks.shape == wa.shape
+        n_banks = spec.n_write + 1
+        for t in range(banks.shape[0]):
+            live = banks[t][wm[t]]
+            assert np.all(live >= 0) and np.all(live < n_banks)
+            assert len(set(live.tolist())) == len(live), (
+                f"cycle {t}: two writes share a bank: {banks[t]} mask {wm[t]}")
+            # idle ports must not claim a bank
+            assert np.all(banks[t][~wm[t]] == -1)
+
+
+def test_h_tables_geometry():
+    """Path tables: direct is a singleton of the write set; write and
+    parity sets intersect exactly in the all-ref leaf paths."""
+    tb = rp.h_tables(32, 2)
+    assert tb.leaf_depth == 8
+    assert tb.direct.shape == (32,)
+    assert tb.write_paths.shape == (32, 4)
+    assert tb.parity_paths.shape == (32, 4)
+    for a in range(32):
+        assert tb.direct[a] in tb.write_paths[a]
+        # direct leaf never appears on the reconstruction path
+        assert tb.direct[a] not in tb.parity_paths[a]
+        # each path set hits distinct leaves
+        assert len(set(tb.write_paths[a])) == 4
+        assert len(set(tb.parity_paths[a])) == 4
+        # both contain the all-ref leaf (last base-3 digit pattern 22)
+        assert tb.write_paths[a][-1] == tb.parity_paths[a][-1] == 8
