@@ -5,6 +5,7 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   fig5_locality     — spatial locality + performance ratio (Fig 5)
   tab_synthesis     — AMM design cost table (Sec III-A synthesis results)
   kernel_microbench — Pallas kernels (interpret mode; TPU is the target)
+  scheduler_microbench — C cycle loop vs pure-Python fallback (large trace)
   lm_smoke_bench    — tiny-arch train/decode step wall times (CPU)
 
 Full-size runs: ``python -m benchmarks.run --full`` (minutes).
@@ -69,7 +70,11 @@ def fig4_dse() -> None:
         _row(f"fig4_dse.{name}", dt,
              f"points={len(pts)};expansion={exp:.2f};"
              f"fastest_banked_us={best_b:.2f};fastest_amm_us={best_a:.2f};"
-             f"pareto_banked={len(fb)};pareto_amm={len(fa)}")
+             f"pareto_banked={len(fb)};pareto_amm={len(fa)};"
+             f"bank_stalls={sum(p.bank_conflict_stalls for p in banking)};"
+             f"amm_parity_stalls={sum(p.parity_fanout_stalls for p in amm)};"
+             f"amm_pair_stalls={sum(p.write_pair_stalls for p in amm)};"
+             f"amm_steer_stalls={sum(p.bank_conflict_stalls for p in amm)}")
 
 
 def fig5_locality() -> None:
@@ -212,6 +217,45 @@ def amm_replay() -> None:
              f"T={n_cycles};per_trace_us={us / n_seeds:.1f}")
 
 
+def scheduler_microbench() -> None:
+    """Compiled C cycle loop vs the pure-Python reference loop on a
+    large prepared trace, across arbitration-heavy memory kinds."""
+    from repro.core.bench import BENCHMARKS, get_trace
+    from repro.core.dse.sweep import _BASE_FU, DesignPoint, _spec_for
+    from repro.core.sim import _cycle_ext, prepare_trace
+    from repro.core.sim.scheduler import (ScheduleConfig, _schedule_c,
+                                          _schedule_py)
+
+    # ~7k nodes in smoke runs, the full 56k-node trace with --full
+    params = BENCHMARKS["gemm_ncubed"].Params() if FULL \
+        else BENCHMARKS["gemm_ncubed"].Params(n=12)
+    pt = prepare_trace(get_trace("gemm_ncubed", params))
+    fast = _cycle_ext.load()
+    for dp in (DesignPoint("banked", n_banks=8),
+               DesignPoint("hb_ntx", 4, 2),
+               DesignPoint("remap", 4, 2)):
+        specs = {aid: _spec_for(dp, pt.array_depths[aid],
+                                pt.trace.word_bytes[aid] * 8)
+                 for aid in pt.trace.array_names}
+        cfg = ScheduleConfig(
+            mem=specs,
+            fu_counts={k: v * 4 for k, v in _BASE_FU.items()})
+        t0 = time.perf_counter()
+        res = _schedule_py(pt, cfg)             # one timed run, result kept
+        py_us = (time.perf_counter() - t0) * 1e6
+        if fast is None:
+            _row(f"scheduler.{dp.label}_py_only", py_us,
+                 f"nodes={pt.n_nodes};cycles={res.cycles};no C compiler")
+            continue
+        c_res = _schedule_c(fast, pt, cfg)
+        if c_res != res:
+            raise RuntimeError(f"C/python loops diverged on {dp.label}")
+        c_us = _t(_schedule_c, fast, pt, cfg, repeat=5)
+        _row(f"scheduler.{dp.label}_c_loop", c_us,
+             f"nodes={pt.n_nodes};cycles={res.cycles};"
+             f"py_loop_us={py_us:.0f};speedup={py_us / c_us:.1f}x")
+
+
 def lm_smoke_bench() -> None:
     """Tiny-config train/decode step wall time per assigned arch."""
     import jax
@@ -288,6 +332,7 @@ TABLES = {
     "tab_synthesis": tab_synthesis,
     "kernel_microbench": kernel_microbench,
     "amm_replay": amm_replay,
+    "scheduler_microbench": scheduler_microbench,
     "lm_smoke_bench": lm_smoke_bench,
     "grad_sync_bench": grad_sync_bench,
 }

@@ -30,11 +30,13 @@ print(f"benchmark={args.bench}  nodes={pt.n_nodes}  "
 
 pts = run_sweep(pt, DEFAULT_DESIGNS, unrolls=(1, 2, 4, 8),
                 jobs=args.jobs, cache_dir=args.cache_dir)
-print(f"{'design':16s} {'unroll':6s} {'cycles':>8s} {'time_us':>9s} "
-      f"{'area_mm2':>9s} {'power_mW':>9s} {'stalls':>8s}")
+print(f"{'design':18s} {'unroll':6s} {'cycles':>8s} {'time_us':>9s} "
+      f"{'area_mm2':>9s} {'power_mW':>9s} {'bank_st':>8s} {'parity_st':>9s} "
+      f"{'pair_st':>7s}")
 for p in sorted(pts, key=lambda p: p.time_us):
-    print(f"{p.design:16s} {p.unroll:<6d} {p.cycles:8d} {p.time_us:9.2f} "
-          f"{p.area_mm2:9.4f} {p.power_mw:9.1f} {p.bank_conflict_stalls:8d}")
+    print(f"{p.design:18s} {p.unroll:<6d} {p.cycles:8d} {p.time_us:9.2f} "
+          f"{p.area_mm2:9.4f} {p.power_mw:9.1f} {p.bank_conflict_stalls:8d} "
+          f"{p.parity_fanout_stalls:9d} {p.write_pair_stalls:7d}")
 
 banking = [p for p in pts if not p.is_amm]
 amm = [p for p in pts if p.is_amm]

@@ -42,8 +42,13 @@ class AMMSpec:
       n_write: write ports exposed to the datapath.
       depth: logical number of words.
       width: word width in bits.
-      n_banks: banking factor (only meaningful for kind=="banked"; for AMM
-        kinds the internal bank structure is implied by the port config).
+      n_banks: banking-structure factor.  For kind=="banked" it is the
+        array-partitioning factor.  For AMM kinds the *leaf* structure is
+        implied by the port config and ``n_banks`` is the additional leaf
+        sub-banking factor (paper Sec. III: depth x port config x
+        banking): every leaf macro is split into ``n_banks``
+        word-interleaved sub-banks — smaller/faster macros in the cost
+        model, finer conflict granularity in the NTX arbitration.
     """
 
     kind: DesignKind
@@ -79,6 +84,12 @@ class AMMSpec:
                 raise ValueError("depth must divide by 2*n_read")
         if self.kind == "banked" and self.n_banks < 1:
             raise ValueError("banked needs >=1 bank")
+        if self.kind in AMM_KINDS:
+            if not _is_pow2(self.n_banks):
+                raise ValueError(
+                    "AMM leaf sub-banking must be a power of two")
+            if self.n_banks > self.leaf_banks()[1]:
+                raise ValueError("leaf sub-banking exceeds leaf depth")
 
     # ------------------------------------------------------------------
     # Structural formulas (feed the cost model).
@@ -130,7 +141,11 @@ class AMMSpec:
 
     @property
     def conflict_free(self) -> bool:
-        """True multiport semantics: any nR+nW accesses issue in one cycle."""
+        """Architecturally conflict-free port guarantee (any nR+nW issue
+        in one cycle when the design's structural rules are met).  The
+        cycle-level arbitration layer (``repro.core.sim.arbiter``) still
+        models the internal mechanics — parity-path fan-out, write
+        pairing, live-bank steering — that deliver the guarantee."""
         return self.kind in ("ideal", "h_ntx_rd", "b_ntx_wr", "hb_ntx", "lvt", "remap")
 
     @property
@@ -143,5 +158,7 @@ class AMMSpec:
         return (
             f"{self.kind}[{self.n_read}R{self.n_write}W {self.depth}x{self.width}b"
             + (f" banks={self.n_banks}" if self.kind == "banked" else "")
+            + (f" sub={self.n_banks}"
+               if self.kind in AMM_KINDS and self.n_banks > 1 else "")
             + "]"
         )

@@ -67,13 +67,22 @@ def memory_cost(spec: AMMSpec) -> MemoryCost:
         leak = macro.leakage_mw
         rd_banks = wr_banks = 1
     elif spec.kind in ("h_ntx_rd", "b_ntx_wr", "hb_ntx"):
-        one = sram_macro(bank_depth, width, ports=2)
-        macro = one.scaled(n_banks)
+        # leaf sub-banking (banking-structure axis): each of the
+        # n_banks leaf structures becomes `sub` smaller interleaved
+        # macros — shorter wordlines (faster access, the cycle-time
+        # coupling consumed by the scheduler's cycle_ns) at the price of
+        # a per-leaf decoder/mux.
+        sub = max(spec.n_banks, 1)
+        one = sram_macro(-(-bank_depth // sub), width, ports=2)
+        macro = one.scaled(n_banks * sub)
         area, leak = macro.area_mm2, macro.leakage_mw
         # Read path: bank select mux per level + XOR with ref on conflict
         # (and B-decode XOR for the write-paired variants).
         glue = lg.bank_decoder(n_banks, _addr_bits(spec.depth))
         glue = glue + lg.mux_tree(width, max(2 * k, 2))
+        if sub > 1:
+            glue = glue + lg.bank_decoder(sub, _addr_bits(bank_depth)) \
+                + lg.mux_tree(width, sub)
         xor_fanin_rd = (2 if k > 0 else 1) + (1 if spec.kind != "h_ntx_rd" else 0)
         if xor_fanin_rd > 1:
             glue = glue + lg.xor_stage(width, xor_fanin_rd)
@@ -87,16 +96,27 @@ def memory_cost(spec: AMMSpec) -> MemoryCost:
         e_rd = one.energy_rd_pj * rd_banks
         e_wr = one.energy_wr_pj * 2 + one.energy_rd_pj * (wr_banks - 2 + 1)
     elif spec.kind in ("lvt", "remap"):
-        one = sram_macro(bank_depth, width, ports=2)
-        macro = one.scaled(n_banks)
+        sub = max(spec.n_banks, 1)      # leaf sub-banking (cost/freq only)
+        one = sram_macro(-(-bank_depth // sub), width, ports=2)
+        macro = one.scaled(n_banks * sub)
         table_bits = max(1, spec.table_bits() // max(spec.depth, 1))
         table = lg.register_table(spec.depth, table_bits)
         glue = table + lg.mux_tree(width, max(spec.n_write + 1, 2)) + \
             lg.bank_decoder(n_banks, _addr_bits(spec.depth))
+        if sub > 1:
+            glue = glue + lg.bank_decoder(sub, _addr_bits(bank_depth)) \
+                + lg.mux_tree(width, sub)
         area, leak = macro.area_mm2, macro.leakage_mw
         access = one.access_ns
         e_rd = one.energy_rd_pj + table.energy_pj
-        e_wr = one.energy_wr_pj + table.energy_pj
+        if spec.kind == "lvt":
+            # every write broadcasts to its bank's read replicas; the
+            # arbitration descriptor is the single source of the fan-out
+            from repro.core.sim.arbiter import compile_spec
+            e_wr = one.energy_wr_pj * compile_spec(spec).write_broadcast \
+                + table.energy_pj
+        else:
+            e_wr = one.energy_wr_pj + table.energy_pj
         rd_banks = wr_banks = 1
     else:  # pragma: no cover
         raise ValueError(spec.kind)

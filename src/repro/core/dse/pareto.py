@@ -41,7 +41,11 @@ def design_space_expansion(
 ) -> float:
     """How much faster the fastest AMM design is vs the fastest banking
     design (>1 means AMM expands the high-performance design space —
-    the blue-shaded region of Fig 4)."""
+    the blue-shaded region of Fig 4).  ``nan`` when either family is
+    empty (a sweep restricted to one family has no expansion to report).
+    """
+    if not banking or not amm:
+        return float("nan")
     tb = min(p.time_us for p in banking)
     ta = min(p.time_us for p in amm)
     return tb / ta

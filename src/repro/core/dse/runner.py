@@ -45,7 +45,9 @@ from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
 
 # Bump when DSEPoint fields or the evaluation semantics change: stale
 # cache entries from older layouts must miss, not deserialize garbage.
-CACHE_VERSION = 1
+# v2: per-kind arbitration layer (stall breakdown fields; multipump /
+# NTX / remap timing semantics).
+CACHE_VERSION = 2
 
 _ENV_CACHE_DIR = "REPRO_DSE_CACHE"
 
@@ -320,11 +322,13 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     t_sweep = time.perf_counter() - t0
 
     print("bench,design,unroll,cycles,time_us,area_mm2,power_mw,"
-          "bank_conflict_stalls,avg_mem_parallelism")
+          "bank_conflict_stalls,parity_fanout_stalls,write_pair_stalls,"
+          "avg_mem_parallelism")
     for p in pts:
         print(f"{p.bench},{p.design},{p.unroll},{p.cycles},"
               f"{p.time_us:.4f},{p.area_mm2:.5f},{p.power_mw:.2f},"
-              f"{p.bank_conflict_stalls},{p.avg_mem_parallelism:.3f}")
+              f"{p.bank_conflict_stalls},{p.parity_fanout_stalls},"
+              f"{p.write_pair_stalls},{p.avg_mem_parallelism:.3f}")
 
     banking = [p for p in pts if not p.is_amm]
     amm = [p for p in pts if p.is_amm]

@@ -34,7 +34,13 @@ _MIN_CYCLE_NS = 0.9  # FU critical path floor at 45nm
 
 @dataclasses.dataclass(frozen=True)
 class DesignPoint:
-    """A memory design template, instantiated per array."""
+    """A memory design template, instantiated per array.
+
+    ``n_banks`` is the banking-structure axis (paper Sec. III: depth x
+    port config x banking): the partitioning factor for ``banked`` and
+    the *leaf sub-banking* factor for AMM kinds (each internal leaf
+    macro split into ``n_banks`` word-interleaved sub-banks).
+    """
     kind: str
     n_read: int = 1
     n_write: int = 1
@@ -44,7 +50,10 @@ class DesignPoint:
     def label(self) -> str:
         if self.kind == "banked":
             return f"banked{self.n_banks}"
-        return f"{self.kind}-{self.n_read}R{self.n_write}W"
+        base = f"{self.kind}-{self.n_read}R{self.n_write}W"
+        if self.is_amm and self.n_banks > 1:
+            return f"{base}-b{self.n_banks}"
+        return base
 
     @property
     def is_amm(self) -> bool:
@@ -68,6 +77,11 @@ DEFAULT_DESIGNS: tuple[DesignPoint, ...] = (
     DesignPoint("lvt", 4, 2),
     DesignPoint("remap", 2, 2),
     DesignPoint("remap", 4, 2),
+    # banking-structure axis: AMM internal leaf sub-banking
+    DesignPoint("h_ntx_rd", 4, 1, n_banks=4),
+    DesignPoint("hb_ntx", 4, 2, n_banks=4),
+    DesignPoint("lvt", 4, 2, n_banks=4),
+    DesignPoint("remap", 4, 2, n_banks=4),
 )
 
 DEFAULT_UNROLLS: tuple[int, ...] = (1, 2, 4, 8)
@@ -85,7 +99,14 @@ class DSEPoint:
     area_mm2: float
     power_mw: float
     bank_conflict_stalls: int
+    parity_fanout_stalls: int
+    write_pair_stalls: int
     avg_mem_parallelism: float
+
+    @property
+    def total_stalls(self) -> int:
+        return (self.bank_conflict_stalls + self.parity_fanout_stalls
+                + self.write_pair_stalls)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -102,7 +123,15 @@ def _spec_for(dp: DesignPoint, depth: int, width_bits: int) -> AMMSpec:
         return AMMSpec("banked", n_read=2 * nb, n_write=2 * nb,
                        depth=depth, width=width_bits, n_banks=nb)
     depth = max(depth, 4 * max(dp.n_read, dp.n_write, 1))
-    return AMMSpec(dp.kind, dp.n_read, dp.n_write, depth, width_bits)
+    sub = 1
+    if dp.is_amm and dp.n_banks > 1:
+        # clamp leaf sub-banking to the leaf depth (pow2, like banked's
+        # depth//4 clamp) so tiny arrays never over-partition
+        leaf_depth = AMMSpec(dp.kind, dp.n_read, dp.n_write, depth,
+                             width_bits).leaf_banks()[1]
+        sub = min(dp.n_banks, 1 << max(leaf_depth.bit_length() - 1, 0))
+    return AMMSpec(dp.kind, dp.n_read, dp.n_write, depth, width_bits,
+                   n_banks=sub)
 
 
 def evaluate_point(
@@ -157,6 +186,8 @@ def evaluate_point(
         area_mm2=area,
         power_mw=p_mem_dyn + p_leak + p_fu,
         bank_conflict_stalls=res.bank_conflict_stalls,
+        parity_fanout_stalls=res.parity_fanout_stalls,
+        write_pair_stalls=res.write_pair_stalls,
         avg_mem_parallelism=res.avg_mem_parallelism,
     )
 

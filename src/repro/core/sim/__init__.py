@@ -1,3 +1,5 @@
+from repro.core.sim.arbiter import (ArbDescriptor, PortArbiter, compile_spec,
+                                    ntx_tables)
 from repro.core.sim.prepared import (PreparedTrace, prepare_trace,
                                      trace_fingerprint)
 from repro.core.sim.scheduler import ScheduleConfig, ScheduleResult, schedule
@@ -6,6 +8,7 @@ from repro.core.sim.trace import (FADD, FDIV, FMUL, IADD, ICMP, IMUL, LOAD,
 
 __all__ = [
     "Trace", "TraceBuilder", "schedule", "ScheduleConfig", "ScheduleResult",
+    "ArbDescriptor", "PortArbiter", "compile_spec", "ntx_tables",
     "PreparedTrace", "prepare_trace", "trace_fingerprint",
     "LOAD", "STORE", "FADD", "FMUL", "FDIV", "IADD", "IMUL", "ICMP", "LOGIC",
 ]

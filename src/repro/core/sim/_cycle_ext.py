@@ -65,8 +65,7 @@ def load():
             [i64, i64, i64]                # n, n_arrays, n_classes
             + [i64p] * 4                   # succ_ptr, succ_idx, indegree, height
             + [u8p, i64p, i64p, i64p]      # is_load, node_lat, word_idx, klass_id
-            + [i64p, i64p, i64p]           # fu_budgets, mem_rd, mem_wr
-            + [u8p, i64p, i64p, u8p]       # banked, nbanks, maxfail, configured
+            + [i64p, i64p]                 # fu_budgets, desc matrix
             + [i64, i64, i64, i64p])       # mem_latency, ports_per_bank, max_cycles, out
         an = lib.analyze_graph
         an.restype = None

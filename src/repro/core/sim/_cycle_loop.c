@@ -6,6 +6,15 @@
  * so pop order — and therefore the whole schedule — is identical to the
  * Python implementation regardless of internal heap layout.
  *
+ * Memory arbitration is per-kind (see repro/core/sim/arbiter.py, whose
+ * PortArbiter is the reference for the NTX/remap branches below):
+ *   ideal/lvt      port budgets only
+ *   multipump      port budgets + shared pumped-slot budget
+ *   banked         per-bank ports (seed-exact, pinned by goldens)
+ *   h/b/hb ntx     leaf-bank read arbitration (direct vs parity path),
+ *                  Ref re-pointing for same-half write pairs
+ *   remap          live-map steering; reads hit the live bank
+ *
  * Packed encodings (n = number of trace nodes):
  *   ready heaps:   prio[i]  = -height[i] * n + i        (may be negative)
  *   inflight heap: finish_cycle * n + node              (non-negative)
@@ -19,6 +28,16 @@
 
 typedef int64_t i64;
 typedef uint8_t u8;
+
+/* kind ids + descriptor field layout: keep in sync with arbiter.py */
+enum { K_IDEAL = 0, K_BANKED = 1, K_MULTIPUMP = 2, K_H_NTX = 3,
+       K_B_NTX = 4, K_HB_NTX = 5, K_LVT = 6, K_REMAP = 7 };
+enum { F_KIND = 0, F_RD, F_WR, F_SLOTS, F_NBANKS, F_DEPTH, F_LEVELS,
+       F_HALF, F_SUB, F_MAXFAIL, F_CONFIGURED, F_NLEAVES, F_TREE_DEPTH,
+       N_FIELDS };
+
+#define MAX_LEVELS 32
+#define MAX_PATHS 128          /* _schedule_c falls back to Python beyond */
 
 static void heap_push(i64 *h, i64 *sz, i64 v) {
     i64 i = (*sz)++;
@@ -88,6 +107,40 @@ static inline i64 node_of(i64 item, i64 n) {
     return m < 0 ? m + n : m;
 }
 
+/* NTX leaf paths: same construction as arbiter.ntx_tables — per level
+ * the address picks its half (bit), the direct leaf is the base-3
+ * number of those bits (ref digit = 2 never appears on the direct
+ * path), and parity path j replaces the levels set in j by the ref
+ * branch and the others by the opposite child. */
+static inline void ntx_direct(i64 tree_depth, i64 k, i64 addr,
+                              i64 *leaf_out, i64 *off_out, i64 *bits)
+{
+    i64 cur = tree_depth, off = addr, d3 = 0;
+    for (i64 l = 0; l < k; l++) {
+        i64 half = cur >> 1;
+        i64 hi = off >= half;
+        bits[l] = hi;
+        d3 = d3 * 3 + hi;
+        if (hi) off -= half;
+        cur = half;
+    }
+    *leaf_out = d3;
+    *off_out = off;
+}
+
+static inline void ntx_parity(i64 k, const i64 *bits, i64 *pleaf)
+{
+    i64 n_paths = (i64)1 << k;
+    for (i64 j = 0; j < n_paths; j++) {
+        i64 d3 = 0;
+        for (i64 l = 0; l < k; l++) {
+            i64 cbit = (j >> (k - 1 - l)) & 1;
+            d3 = d3 * 3 + (cbit ? 2 : 1 - bits[l]);
+        }
+        pleaf[j] = d3;
+    }
+}
+
 i64 run_schedule(
     i64 n, i64 n_arrays, i64 n_classes,
     const i64 *succ_ptr, const i64 *succ_idx,
@@ -95,22 +148,34 @@ i64 run_schedule(
     const u8 *is_load, const i64 *node_lat,
     const i64 *word_idx, const i64 *klass_id,
     const i64 *fu_budgets,          /* [n_classes - n_arrays] */
-    const i64 *mem_rd, const i64 *mem_wr,      /* [n_arrays] */
-    const u8 *mem_banked, const i64 *mem_nbanks,
-    const i64 *mem_maxfail, const u8 *mem_configured,
+    const i64 *desc,                /* [n_arrays * N_FIELDS] */
     i64 mem_latency, i64 ports_per_bank, i64 max_cycles,
-    i64 *out)   /* [5 + n_arrays]: cycles, issued, mem_issued,
-                   conflict_stalls, mem_cycles_used, per_array... */
+    i64 *out)   /* [9 + n_arrays]: cycles, issued, mem_issued,
+                   bank_stalls, mem_cycles_used, parity_stalls,
+                   pair_stalls, parity_reads, pair_rmws, per_array... */
 {
     i64 rc = -4;
     i64 *npreds = NULL, *prio = NULL, *coff = NULL, *hsz = NULL;
     i64 *harena = NULL, *inflight = NULL, *deferred = NULL;
     i64 *bank_use = NULL, *touched = NULL, *per_array = NULL;
-    u8 *delayed = NULL;
+    i64 *remap_map = NULL, *map_off = NULL;
+    u8 *delayed = NULL, *leaf_use = NULL, *wr_used = NULL;
 
-    i64 max_nb = 1;
-    for (i64 a = 0; a < n_arrays; a++)
-        if (mem_configured[a] && mem_nbanks[a] > max_nb) max_nb = mem_nbanks[a];
+    i64 max_nb = 1, max_leaf = 1, map_total = 0;
+    for (i64 a = 0; a < n_arrays; a++) {
+        const i64 *d = desc + a * N_FIELDS;
+        if (!d[F_CONFIGURED]) continue;
+        i64 kind = d[F_KIND];
+        if ((kind == K_BANKED || kind == K_REMAP) && d[F_NBANKS] > max_nb)
+            max_nb = d[F_NBANKS];
+        if (kind == K_H_NTX || kind == K_B_NTX || kind == K_HB_NTX) {
+            i64 trees = (kind == K_H_NTX) ? 1 : 3;
+            i64 slots = trees * d[F_NLEAVES] * d[F_SUB];
+            if (slots > max_leaf) max_leaf = slots;
+        }
+        if (kind == K_REMAP) map_total += d[F_DEPTH];
+    }
+    i64 max_touch = max_nb > max_leaf ? max_nb : max_leaf;
 
     npreds = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
     prio = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
@@ -120,12 +185,29 @@ i64 run_schedule(
     inflight = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
     deferred = malloc((size_t)(n > 0 ? n : 1) * sizeof(i64));
     bank_use = calloc((size_t)max_nb, sizeof(i64));
-    touched = malloc((size_t)max_nb * sizeof(i64));
+    touched = malloc((size_t)max_touch * sizeof(i64));
     per_array = calloc((size_t)(n_arrays > 0 ? n_arrays : 1), sizeof(i64));
     delayed = calloc((size_t)(n > 0 ? n : 1), 1);
+    leaf_use = calloc((size_t)max_leaf, 1);
+    wr_used = calloc((size_t)max_nb, 1);
+    remap_map = calloc((size_t)(map_total > 0 ? map_total : 1), sizeof(i64));
+    map_off = calloc((size_t)(n_arrays > 0 ? n_arrays : 1), sizeof(i64));
     if (!npreds || !prio || !coff || !hsz || !harena || !inflight ||
-        !deferred || !bank_use || !touched || !per_array || !delayed)
+        !deferred || !bank_use || !touched || !per_array || !delayed ||
+        !leaf_use || !wr_used || !remap_map || !map_off)
         goto cleanup;
+
+    {   /* live-map arena offsets per remap array (maps start all-zero,
+         * matching replay's init_flat) */
+        i64 off = 0;
+        for (i64 a = 0; a < n_arrays; a++) {
+            const i64 *d = desc + a * N_FIELDS;
+            if (d[F_CONFIGURED] && d[F_KIND] == K_REMAP) {
+                map_off[a] = off;
+                off += d[F_DEPTH];
+            }
+        }
+    }
 
     /* per-class heap arena offsets: heap c may hold every node of class c */
     for (i64 i = 0; i < n; i++) coff[klass_id[i] + 1]++;
@@ -141,7 +223,8 @@ i64 run_schedule(
         }
 
     i64 inflight_sz = 0;
-    i64 cycle = 0, issued = 0, mem_issued = 0, stalls = 0;
+    i64 cycle = 0, issued = 0, mem_issued = 0, bank_stalls = 0;
+    i64 parity_stalls = 0, pair_stalls = 0, parity_reads = 0, pair_rmws = 0;
     i64 mem_cycles_used = 0, remaining = n;
 
     while (remaining > 0) {
@@ -177,51 +260,250 @@ i64 run_schedule(
                     budget--;
                 }
             } else {
-                if (!mem_configured[c]) { rc = -3; goto cleanup; }
-                i64 rd = mem_rd[c], wr = mem_wr[c];
-                int bankedf = mem_banked[c];
-                i64 nb = mem_nbanks[c], maxf = mem_maxfail[c];
-                i64 nd = 0, failed = 0, sat = 0, ntouch = 0;
-                while (hsz[c] > 0 && (rd > 0 || wr > 0)) {
-                    if (bankedf && (sat >= nb || failed >= maxf)) break;
-                    i64 item = heap_pop(heap, &hsz[c]);
-                    i64 node = node_of(item, n);
-                    int ld = is_load[node];
-                    if (ld && rd <= 0) {
-                        deferred[nd++] = item;
-                        if (++failed >= maxf) break;
-                        continue;
-                    }
-                    if (!ld && wr <= 0) {
-                        deferred[nd++] = item;
-                        if (++failed >= maxf) break;
-                        continue;
-                    }
-                    if (bankedf) {
+                const i64 *dsc = desc + c * N_FIELDS;
+                if (!dsc[F_CONFIGURED]) { rc = -3; goto cleanup; }
+                i64 kind = dsc[F_KIND];
+                i64 rd = dsc[F_RD], wr = dsc[F_WR];
+                i64 maxf = dsc[F_MAXFAIL];
+                i64 nd = 0, failed = 0;
+
+                if (kind == K_BANKED) {
+                    /* seed-exact banked serialization */
+                    i64 nb = dsc[F_NBANKS];
+                    i64 sat = 0, ntouch = 0;
+                    while (hsz[c] > 0 && (rd > 0 || wr > 0)) {
+                        if (sat >= nb || failed >= maxf) break;
+                        i64 item = heap_pop(heap, &hsz[c]);
+                        i64 node = node_of(item, n);
+                        int ld = is_load[node];
+                        if (ld && rd <= 0) {
+                            deferred[nd++] = item;
+                            if (++failed >= maxf) break;
+                            continue;
+                        }
+                        if (!ld && wr <= 0) {
+                            deferred[nd++] = item;
+                            if (++failed >= maxf) break;
+                            continue;
+                        }
                         i64 bank = word_idx[node] % nb;
                         i64 used = bank_use[bank];
                         if (used >= ports_per_bank) {
                             deferred[nd++] = item;
-                            if (!delayed[node]) { delayed[node] = 1; stalls++; }
+                            if (!delayed[node]) {
+                                delayed[node] = 1; bank_stalls++;
+                            }
                             failed++;
                             continue;
                         }
                         if (used == 0) touched[ntouch++] = bank;
                         bank_use[bank] = used + 1;
                         if (used + 1 == ports_per_bank) sat++;
+                        i64 lat = ld ? mem_latency : node_lat[node];
+                        heap_push(inflight, &inflight_sz,
+                                  (cycle + lat) * n + node);
+                        issued++; mem_issued++; any_mem++; per_array[c]++;
+                        if (ld) rd--; else wr--;
                     }
-                    i64 lat = ld ? mem_latency : node_lat[node];
-                    heap_push(inflight, &inflight_sz, (cycle + lat) * n + node);
-                    issued++;
-                    mem_issued++;
-                    any_mem++;
-                    per_array[c]++;
-                    if (ld) rd--; else wr--;
+                    for (i64 t = 0; t < ntouch; t++) bank_use[touched[t]] = 0;
+                } else if (kind == K_IDEAL || kind == K_LVT ||
+                           kind == K_MULTIPUMP) {
+                    /* port budgets + shared pumped-slot budget */
+                    i64 slots = dsc[F_SLOTS];
+                    while (hsz[c] > 0 && (rd > 0 || wr > 0) && slots > 0) {
+                        i64 item = heap_pop(heap, &hsz[c]);
+                        i64 node = node_of(item, n);
+                        int ld = is_load[node];
+                        if (ld && rd <= 0) {
+                            deferred[nd++] = item;
+                            if (++failed >= maxf) break;
+                            continue;
+                        }
+                        if (!ld && wr <= 0) {
+                            deferred[nd++] = item;
+                            if (++failed >= maxf) break;
+                            continue;
+                        }
+                        i64 lat = ld ? mem_latency : node_lat[node];
+                        heap_push(inflight, &inflight_sz,
+                                  (cycle + lat) * n + node);
+                        issued++; mem_issued++; any_mem++; per_array[c]++;
+                        slots--;
+                        if (ld) rd--; else wr--;
+                    }
+                } else if (kind == K_REMAP) {
+                    /* live-map steering (twin of PortArbiter._remap) */
+                    i64 nb = dsc[F_NBANKS], dep = dsc[F_DEPTH];
+                    i64 *map = remap_map + map_off[c];
+                    while (hsz[c] > 0 && (rd > 0 || wr > 0)) {
+                        if (failed >= maxf) break;
+                        i64 item = heap_pop(heap, &hsz[c]);
+                        i64 node = node_of(item, n);
+                        int ld = is_load[node];
+                        if (ld && rd <= 0) {
+                            deferred[nd++] = item; failed++; continue;
+                        }
+                        if (!ld && wr <= 0) {
+                            deferred[nd++] = item; failed++; continue;
+                        }
+                        i64 a = word_idx[node] % dep;
+                        if (ld) {
+                            i64 bank = map[a];
+                            if (bank_use[bank] >= ports_per_bank) {
+                                deferred[nd++] = item;
+                                if (!delayed[node]) {
+                                    delayed[node] = 1; bank_stalls++;
+                                }
+                                failed++;
+                                continue;
+                            }
+                            bank_use[bank]++;
+                        } else {
+                            i64 chosen = -1, start = map[a];
+                            for (i64 i = 0; i < nb; i++) {
+                                i64 b = (start + i) % nb;
+                                if (!wr_used[b] &&
+                                        bank_use[b] < ports_per_bank) {
+                                    chosen = b;
+                                    break;
+                                }
+                            }
+                            if (chosen < 0) {
+                                deferred[nd++] = item;
+                                if (!delayed[node]) {
+                                    delayed[node] = 1; bank_stalls++;
+                                }
+                                failed++;
+                                continue;
+                            }
+                            wr_used[chosen] = 1;
+                            bank_use[chosen]++;
+                            map[a] = chosen;
+                        }
+                        i64 lat = ld ? mem_latency : node_lat[node];
+                        heap_push(inflight, &inflight_sz,
+                                  (cycle + lat) * n + node);
+                        issued++; mem_issued++; any_mem++; per_array[c]++;
+                        if (ld) rd--; else wr--;
+                    }
+                    memset(bank_use, 0, (size_t)nb * sizeof(i64));
+                    memset(wr_used, 0, (size_t)nb);
+                } else {
+                    /* NTX kinds: leaf read arbitration + write pairing
+                     * (twin of PortArbiter._ntx) */
+                    i64 k = dsc[F_LEVELS], npaths = (i64)1 << k;
+                    i64 nl = dsc[F_NLEAVES], sb = dsc[F_SUB];
+                    i64 td = dsc[F_TREE_DEPTH], dep = dsc[F_DEPTH];
+                    i64 half = dsc[F_HALF];
+                    i64 bits[MAX_LEVELS], pleaf[MAX_PATHS];
+                    i64 wr_half[2] = {0, 0};
+                    i64 pair_used = 0, ntouch = 0;
+                    while (hsz[c] > 0 && (rd > 0 || wr > 0)) {
+                        if (failed >= maxf) break;
+                        i64 item = heap_pop(heap, &hsz[c]);
+                        i64 node = node_of(item, n);
+                        int ld = is_load[node];
+                        if (ld && rd <= 0) {
+                            deferred[nd++] = item; failed++; continue;
+                        }
+                        if (!ld && wr <= 0) {
+                            deferred[nd++] = item; failed++; continue;
+                        }
+                        i64 a = word_idx[node] % dep;
+                        i64 tree = 0, ta = a;
+                        if (kind != K_H_NTX) {
+                            tree = a >= half;
+                            ta = a - (tree ? half : 0);
+                        }
+                        int ok = 1;
+                        if (!ld) {
+                            if (kind == K_H_NTX) {
+                                /* single dedicated write port */
+                            } else if (wr_half[tree] == 0) {
+                                wr_half[tree] = 1;        /* plain write */
+                            } else if (pair_used) {
+                                ok = 0;                   /* one re-point */
+                            } else {
+                                i64 leaf, off;
+                                ntx_direct(td, k, ta, &leaf, &off, bits);
+                                i64 s = off % sb;
+                                i64 ko = ((1 - tree) * nl + leaf) * sb + s;
+                                i64 kr = (2 * nl + leaf) * sb + s;
+                                if (leaf_use[ko] || leaf_use[kr]) {
+                                    ok = 0;   /* Ref RMW read path busy */
+                                } else {
+                                    leaf_use[ko] = 1; touched[ntouch++] = ko;
+                                    leaf_use[kr] = 1; touched[ntouch++] = kr;
+                                    pair_used = 1;
+                                    wr_half[tree]++;
+                                    pair_rmws++;
+                                }
+                            }
+                            if (!ok) {
+                                deferred[nd++] = item;
+                                if (!delayed[node]) {
+                                    delayed[node] = 1; pair_stalls++;
+                                }
+                                failed++;
+                                continue;
+                            }
+                        } else {
+                            i64 leaf, off;
+                            ntx_direct(td, k, ta, &leaf, &off, bits);
+                            i64 s = off % sb;
+                            i64 kd = (tree * nl + leaf) * sb + s;
+                            i64 kr = (2 * nl + leaf) * sb + s;
+                            int want_ref = kind != K_H_NTX;
+                            if (!leaf_use[kd] && !(want_ref && leaf_use[kr])) {
+                                leaf_use[kd] = 1; touched[ntouch++] = kd;
+                                if (want_ref) {
+                                    leaf_use[kr] = 1; touched[ntouch++] = kr;
+                                }
+                            } else {
+                                /* parity path: every leaf must be free */
+                                ntx_parity(k, bits, pleaf);
+                                ok = 1;
+                                for (i64 j = 0; j < npaths && ok; j++) {
+                                    i64 kp = (tree * nl + pleaf[j]) * sb + s;
+                                    if (leaf_use[kp]) ok = 0;
+                                    if (want_ref && ok &&
+                                        leaf_use[(2 * nl + pleaf[j]) * sb + s])
+                                        ok = 0;
+                                }
+                                if (ok) {
+                                    for (i64 j = 0; j < npaths; j++) {
+                                        i64 kp = (tree * nl + pleaf[j]) * sb
+                                                 + s;
+                                        leaf_use[kp] = 1;
+                                        touched[ntouch++] = kp;
+                                        if (want_ref) {
+                                            i64 kq = (2 * nl + pleaf[j]) * sb
+                                                     + s;
+                                            leaf_use[kq] = 1;
+                                            touched[ntouch++] = kq;
+                                        }
+                                    }
+                                    parity_reads++;
+                                } else {
+                                    deferred[nd++] = item;
+                                    if (!delayed[node]) {
+                                        delayed[node] = 1; parity_stalls++;
+                                    }
+                                    failed++;
+                                    continue;
+                                }
+                            }
+                        }
+                        i64 lat = ld ? mem_latency : node_lat[node];
+                        heap_push(inflight, &inflight_sz,
+                                  (cycle + lat) * n + node);
+                        issued++; mem_issued++; any_mem++; per_array[c]++;
+                        if (ld) rd--; else wr--;
+                    }
+                    for (i64 t = 0; t < ntouch; t++) leaf_use[touched[t]] = 0;
                 }
-                for (i64 k = 0; k < nd; k++)
-                    heap_push(heap, &hsz[c], deferred[k]);
-                for (i64 k = 0; k < ntouch; k++)
-                    bank_use[touched[k]] = 0;
+                for (i64 t = 0; t < nd; t++)
+                    heap_push(heap, &hsz[c], deferred[t]);
             }
             if (hsz[c] > 0) any_active = 1;
         }
@@ -241,14 +523,19 @@ i64 run_schedule(
     out[0] = cycle;
     out[1] = issued;
     out[2] = mem_issued;
-    out[3] = stalls;
+    out[3] = bank_stalls;
     out[4] = mem_cycles_used;
-    for (i64 a = 0; a < n_arrays; a++) out[5 + a] = per_array[a];
+    out[5] = parity_stalls;
+    out[6] = pair_stalls;
+    out[7] = parity_reads;
+    out[8] = pair_rmws;
+    for (i64 a = 0; a < n_arrays; a++) out[9 + a] = per_array[a];
     rc = 0;
 
 cleanup:
     free(npreds); free(prio); free(coff); free(hsz); free(harena);
     free(inflight); free(deferred); free(bank_use); free(touched);
-    free(per_array); free(delayed);
+    free(per_array); free(delayed); free(leaf_use); free(wr_used);
+    free(remap_map); free(map_off);
     return rc;
 }

@@ -5,15 +5,22 @@ DAG allows multiple accesses and the scheduler then issues the number of
 accesses requested, accordingly from the read-write port configurations
 and port width defined by the user.'
 
-Resource model per cycle:
-  * per-array memory ports — for conflict-free designs (AMM / ideal):
-    ``n_read`` loads + ``n_write`` stores may issue per cycle, any
-    addresses;
-  * for ``banked``: each bank is an independent dual-port macro; an
-    access issues only if its bank has a port left this cycle — the
+Resource model per cycle (see ``repro.core.sim.arbiter`` for the full
+per-kind rules):
+  * ``ideal`` / ``lvt`` — ``n_read`` loads + ``n_write`` stores, any
+    addresses (LVT's replica broadcast is a cost effect, not timing);
+  * ``banked`` — each bank is an independent dual-port macro; an access
+    issues only if its bank has a port left this cycle — the
     bank-conflict serialization the paper contrasts AMMs against;
-  * for ``multipump``: 2x ports per external cycle (internally double
-    clocked; the frequency penalty is applied by the cost composition);
+  * ``multipump`` — the advertised ports, delivered from an internally
+    double-clocked dual-port macro (at most ``ports_per_bank * 2``
+    total accesses per external cycle; the frequency penalty is applied
+    by the cost composition);
+  * ``h_ntx_rd`` / ``b_ntx_wr`` / ``hb_ntx`` — leaf-bank arbitration:
+    reads take their direct leaf or fan out over the whole parity path;
+    same-half write pairs go through the single Ref re-pointing unit;
+  * ``remap`` — reads must hit the live bank from the steering table;
+    writes are steered to a conflict-free bank and update the table;
   * functional units — ``fu_counts[kind]`` parallel units, as produced
     by Aladdin's loop unrolling ('multi-issue ALUs may be constructed by
     loop unrolling').
@@ -35,7 +42,14 @@ import heapq
 from repro.core.amm.spec import AMMSpec
 from repro.core.sim import _cycle_ext
 from repro.core.sim import trace as T
+from repro.core.sim.arbiter import (KIND_BANKED, KIND_REMAP, N_FIELDS,
+                                    STALL_BANK, STALL_PARITY, PortArbiter,
+                                    _NTX_KINDS, compile_descriptors,
+                                    descriptor_matrix)
 from repro.core.sim.prepared import FU_ORDER, PreparedTrace, prepare_trace
+
+# C fallback guard: the compiled loop uses fixed-size path buffers
+_MAX_C_PARITY_PATHS = 128
 
 
 @dataclasses.dataclass
@@ -52,9 +66,24 @@ class ScheduleResult:
     cycles: int
     issued: int
     mem_issued: int
-    bank_conflict_stalls: int               # unique accesses delayed >=1 cycle by banking
+    bank_conflict_stalls: int               # unique accesses delayed >=1 cycle
+                                            #   by bank/steering conflicts
+    parity_fanout_stalls: int               # NTX reads with direct leaf AND
+                                            #   parity path busy
+    write_pair_stalls: int                  # B/HB-NTX same-half write pairs
+                                            #   blocked on the Ref RMW path
+    parity_path_reads: int                  # reads served via XOR parity path
+    write_pair_rmws: int                    # successful Ref re-pointing flows
     per_array_accesses: dict[int, int]
     avg_mem_parallelism: float
+
+    def stall_breakdown(self) -> dict[str, int]:
+        """Per-cause unique-access stall counts (paper Sec. II timing)."""
+        return {
+            "bank_conflict": self.bank_conflict_stalls,
+            "parity_fanout": self.parity_fanout_stalls,
+            "write_pair": self.write_pair_stalls,
+        }
 
     def summary(self) -> dict:
         return dataclasses.asdict(self)
@@ -67,7 +96,8 @@ def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig) -> ScheduleResu
     ``repro.core.sim._cycle_ext``); the pure-Python loop below is the
     reference implementation and the fallback.  Both are cycle-exact
     twins — golden regression tests pin their outputs against the seed
-    scheduler.
+    scheduler for ``ideal``/``banked`` and against each other for every
+    AMM kind (``tests/test_arbiter.py``).
     """
     pt = prepare_trace(tr)
     fast = _cycle_ext.load()
@@ -76,6 +106,10 @@ def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig) -> ScheduleResu
         if res is not None:
             return res
     return _schedule_py(pt, cfg)
+
+
+def _descriptors(pt: PreparedTrace, cfg: ScheduleConfig):
+    return compile_descriptors(cfg.mem, pt.n_arrays, cfg.ports_per_bank)
 
 
 def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult | None":
@@ -88,29 +122,17 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
     n_arrays = pt.n_arrays
     n_classes = n_arrays + len(FU_ORDER)
 
+    descs = _descriptors(pt, cfg)
+    for d in descs:
+        if d is not None and d.kind in _NTX_KINDS \
+                and (1 << d.levels) > _MAX_C_PARITY_PATHS:
+            return None                    # exceeds C path buffers: fall back
+    desc_mat = descriptor_matrix(descs)
+
     fu_budgets = np.asarray(
         [cfg.fu_counts.get(name, 1) for name in FU_ORDER], np.int64)
-    mem_rd = np.zeros(max(n_arrays, 1), np.int64)
-    mem_wr = np.zeros(max(n_arrays, 1), np.int64)
-    mem_banked = np.zeros(max(n_arrays, 1), np.uint8)
-    mem_nbanks = np.ones(max(n_arrays, 1), np.int64)
-    mem_maxfail = np.zeros(max(n_arrays, 1), np.int64)
-    mem_configured = np.zeros(max(n_arrays, 1), np.uint8)
-    for aid in range(n_arrays):
-        spec = cfg.mem.get(aid)
-        if spec is None:
-            continue
-        rd, wr = spec.n_read, spec.n_write
-        if spec.kind == "multipump":
-            rd, wr = rd * 2, wr * 2
-        mem_rd[aid] = rd
-        mem_wr[aid] = wr
-        mem_banked[aid] = spec.kind == "banked"
-        mem_nbanks[aid] = spec.n_banks
-        mem_maxfail[aid] = 4 * spec.n_banks * cfg.ports_per_bank + 8
-        mem_configured[aid] = 1
 
-    out = np.zeros(5 + n_arrays, np.int64)
+    out = np.zeros(9 + n_arrays, np.int64)
     i64p = ctypes.POINTER(ctypes.c_longlong)
     u8p = ctypes.POINTER(ctypes.c_ubyte)
 
@@ -125,8 +147,7 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
         ip(pt.succ_ptr), ip(pt.succ_idx), ip(pt.indegree), ip(pt.height),
         up(pt.is_load_np), ip(pt.latency_np), ip(pt.word_index_np),
         ip(pt.klass_np),
-        ip(fu_budgets), ip(mem_rd), ip(mem_wr),
-        up(mem_banked), ip(mem_nbanks), ip(mem_maxfail), up(mem_configured),
+        ip(fu_budgets), ip(desc_mat),
         cfg.mem_latency, cfg.ports_per_bank, cfg.max_cycles,
         ip(out))
     if rc == -1:
@@ -142,7 +163,11 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
         issued=int(out[1]),
         mem_issued=int(out[2]),
         bank_conflict_stalls=int(out[3]),
-        per_array_accesses={a: int(out[5 + a]) for a in trace.array_names},
+        parity_fanout_stalls=int(out[5]),
+        write_pair_stalls=int(out[6]),
+        parity_path_reads=int(out[7]),
+        write_pair_rmws=int(out[8]),
+        per_array_accesses={a: int(out[9 + a]) for a in trace.array_names},
         avg_mem_parallelism=int(out[2]) / max(int(out[4]), 1),
     )
 
@@ -177,27 +202,34 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
     for c in active:
         heapify(heaps[c])
 
-    # per-class config, resolved once: FU issue widths and memory specs
+    # per-class config, resolved once: FU issue widths and per-array
+    # arbitration descriptors (see repro.core.sim.arbiter).  Simple and
+    # banked kinds keep the seed-exact inline paths; the NTX kinds and
+    # remap get a stateful PortArbiter.
     fu_budgets = [cfg.fu_counts.get(name, 1) for name in FU_ORDER]
     ports_per_bank = cfg.ports_per_bank
-    mem_info: list = [None] * n_arrays      # (rd, wr, banked, n_banks, max_failed)
-    for aid in range(n_arrays):
-        spec = cfg.mem.get(aid)
-        if spec is None:
+    descs = _descriptors(pt, cfg)
+    mem_info: list = [None] * n_arrays
+    arbiters: list = [None] * n_arrays
+    for aid, d in enumerate(descs):
+        if d is None:
             continue                        # KeyError only if ops ever ready
-        rd, wr = spec.n_read, spec.n_write
-        if spec.kind == "multipump":
-            rd, wr = rd * 2, wr * 2
-        mem_info[aid] = (rd, wr, spec.kind == "banked", spec.n_banks,
-                         4 * spec.n_banks * ports_per_bank + 8)
+        if d.kind == KIND_BANKED:
+            mem_info[aid] = ("B", d.rd, d.wr, d.n_banks, d.max_failed)
+        elif d.kind in _NTX_KINDS or d.kind == KIND_REMAP:
+            arbiters[aid] = PortArbiter(d, ports_per_bank)
+            mem_info[aid] = ("A", d.rd, d.wr, d.max_failed)
+        else:
+            mem_info[aid] = ("S", d.rd, d.wr, d.slots, d.max_failed)
 
     inflight: list[int] = []               # finish_cycle * n + node
     cycle = 0
     issued = mem_issued = conflict_stalls = 0
+    parity_stalls = pair_stalls = 0
     per_array: dict[int, int] = {a: 0 for a in trace.array_names}
     mem_cycles_used = 0
     remaining = n
-    delayed = bytearray(n)                 # nodes already counted as bank-stalled
+    delayed = bytearray(n)                 # nodes already counted as stalled
     mem_latency = cfg.mem_latency
     max_cycles = cfg.max_cycles
 
@@ -232,35 +264,38 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                 info = mem_info[c]
                 if info is None:
                     raise KeyError(c)      # memory op on an unconfigured array
-                rd_budget, wr_budget, banked, n_banks, max_failed = info
-                bank_use: dict[int, int] = {}
-                deferred: list[int] = []
-                # Bound the scan: once every bank is saturated (or we have
-                # burned a generous number of failed pops) nothing further
-                # in this array's heap can issue this cycle.  Without the
-                # cap the deferral loop is O(ready) per cycle -> quadratic.
-                failed_pops = 0
-                saturated_banks = 0
-                while heap and (rd_budget > 0 or wr_budget > 0):
-                    if banked and (saturated_banks >= n_banks
-                                   or failed_pops >= max_failed):
-                        break
-                    item = heappop(heap)
-                    node = item % n
-                    ld = is_load[node]
-                    if ld and rd_budget <= 0:
-                        deferred.append(item)
-                        failed_pops += 1
-                        if failed_pops >= max_failed:
+                tag = info[0]
+                if tag == "B":
+                    # banked: seed-exact bank-port serialization
+                    _, rd_budget, wr_budget, n_banks, max_failed = info
+                    bank_use: dict[int, int] = {}
+                    deferred: list[int] = []
+                    # Bound the scan: once every bank is saturated (or we
+                    # have burned a generous number of failed pops) nothing
+                    # further in this array's heap can issue this cycle.
+                    # Without the cap the deferral loop is O(ready) per
+                    # cycle -> quadratic.
+                    failed_pops = 0
+                    saturated_banks = 0
+                    while heap and (rd_budget > 0 or wr_budget > 0):
+                        if (saturated_banks >= n_banks
+                                or failed_pops >= max_failed):
                             break
-                        continue
-                    if not ld and wr_budget <= 0:
-                        deferred.append(item)
-                        failed_pops += 1
-                        if failed_pops >= max_failed:
-                            break
-                        continue
-                    if banked:
+                        item = heappop(heap)
+                        node = item % n
+                        ld = is_load[node]
+                        if ld and rd_budget <= 0:
+                            deferred.append(item)
+                            failed_pops += 1
+                            if failed_pops >= max_failed:
+                                break
+                            continue
+                        if not ld and wr_budget <= 0:
+                            deferred.append(item)
+                            failed_pops += 1
+                            if failed_pops >= max_failed:
+                                break
+                            continue
                         bank = word_idx[node] % n_banks
                         used = bank_use.get(bank, 0)
                         if used >= ports_per_bank:
@@ -273,18 +308,100 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                         bank_use[bank] = used + 1
                         if used + 1 == ports_per_bank:
                             saturated_banks += 1
-                    lat = mem_latency if ld else node_lat[node]
-                    heappush(inflight, (cycle + lat) * n + node)
-                    issued += 1
-                    mem_issued += 1
-                    any_mem_this_cycle += 1
-                    per_array[c] += 1
-                    if ld:
-                        rd_budget -= 1
-                    else:
-                        wr_budget -= 1
-                for item in deferred:
-                    heappush(heap, item)
+                        lat = mem_latency if ld else node_lat[node]
+                        heappush(inflight, (cycle + lat) * n + node)
+                        issued += 1
+                        mem_issued += 1
+                        any_mem_this_cycle += 1
+                        per_array[c] += 1
+                        if ld:
+                            rd_budget -= 1
+                        else:
+                            wr_budget -= 1
+                    for item in deferred:
+                        heappush(heap, item)
+                elif tag == "S":
+                    # ideal / lvt / multipump: port budgets plus the shared
+                    # pumped-slot budget (binding for multipump only)
+                    _, rd_budget, wr_budget, slots, max_failed = info
+                    deferred = []
+                    failed_pops = 0
+                    while heap and (rd_budget > 0 or wr_budget > 0) \
+                            and slots > 0:
+                        item = heappop(heap)
+                        node = item % n
+                        ld = is_load[node]
+                        if ld and rd_budget <= 0:
+                            deferred.append(item)
+                            failed_pops += 1
+                            if failed_pops >= max_failed:
+                                break
+                            continue
+                        if not ld and wr_budget <= 0:
+                            deferred.append(item)
+                            failed_pops += 1
+                            if failed_pops >= max_failed:
+                                break
+                            continue
+                        lat = mem_latency if ld else node_lat[node]
+                        heappush(inflight, (cycle + lat) * n + node)
+                        issued += 1
+                        mem_issued += 1
+                        any_mem_this_cycle += 1
+                        per_array[c] += 1
+                        slots -= 1
+                        if ld:
+                            rd_budget -= 1
+                        else:
+                            wr_budget -= 1
+                    for item in deferred:
+                        heappush(heap, item)
+                else:
+                    # NTX kinds / remap: structural arbitration per access
+                    _, rd_budget, wr_budget, max_failed = info
+                    arb = arbiters[c]
+                    arb.begin_cycle()
+                    deferred = []
+                    failed_pops = 0
+                    while heap and (rd_budget > 0 or wr_budget > 0):
+                        if failed_pops >= max_failed:
+                            break
+                        item = heappop(heap)
+                        node = item % n
+                        ld = is_load[node]
+                        if ld and rd_budget <= 0:
+                            deferred.append(item)
+                            failed_pops += 1
+                            continue
+                        if not ld and wr_budget <= 0:
+                            deferred.append(item)
+                            failed_pops += 1
+                            continue
+                        ok, cause, _ev = arb.access(ld, word_idx[node])
+                        if not ok:
+                            deferred.append(item)
+                            if not delayed[node]:
+                                delayed[node] = 1
+                                if cause == STALL_BANK:
+                                    conflict_stalls += 1
+                                elif cause == STALL_PARITY:
+                                    parity_stalls += 1
+                                else:
+                                    pair_stalls += 1
+                            failed_pops += 1
+                            continue
+                        lat = mem_latency if ld else node_lat[node]
+                        heappush(inflight, (cycle + lat) * n + node)
+                        issued += 1
+                        mem_issued += 1
+                        any_mem_this_cycle += 1
+                        per_array[c] += 1
+                        if ld:
+                            rd_budget -= 1
+                        else:
+                            wr_budget -= 1
+                    for item in deferred:
+                        heappush(heap, item)
             if not heap:
                 active.discard(c)
         if any_mem_this_cycle:
@@ -303,11 +420,17 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                     # op completes; skipping the idle cycles is cycle-exact.
                     cycle = next_finish
 
+    parity_reads = sum(a.parity_path_reads for a in arbiters if a is not None)
+    pair_rmws = sum(a.write_pair_rmws for a in arbiters if a is not None)
     return ScheduleResult(
         cycles=cycle,
         issued=issued,
         mem_issued=mem_issued,
         bank_conflict_stalls=conflict_stalls,
+        parity_fanout_stalls=parity_stalls,
+        write_pair_stalls=pair_stalls,
+        parity_path_reads=parity_reads,
+        write_pair_rmws=pair_rmws,
         per_array_accesses=per_array,
         avg_mem_parallelism=mem_issued / max(mem_cycles_used, 1),
     )

@@ -1,0 +1,268 @@
+"""Arbitration-layer cross-validation (ISSUE 3 tentpole).
+
+Three pins:
+  1. the arbiter's leaf-path tables are identical to the functional
+     replay engine's ``h_tables`` (same geometry -> same hardware);
+  2. the arbiter's per-cycle decisions reproduce the functional models'
+     observed behavior on shared address traces — remap bank steering
+     equals ``replay`` write_banks / final map, and B/HB write-pair RMW
+     activations equal the models' conflict condition;
+  3. the compiled C cycle loop and the pure-Python loop agree on the
+     full ``ScheduleResult`` for every design kind (the goldens pin
+     ideal/banked against the seed; this pins the new kinds against
+     each other).
+"""
+import numpy as np
+import pytest
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.bench import get_trace
+from repro.core.dse.sweep import _BASE_FU, DesignPoint, _spec_for
+from repro.core.sim import prepare_trace
+from repro.core.sim.arbiter import (PortArbiter, compile_spec, ntx_tables)
+from repro.core.sim.scheduler import (ScheduleConfig, _schedule_c,
+                                      _schedule_py, schedule)
+from repro.core.sim import _cycle_ext
+from repro.core.sim.trace import TraceBuilder
+
+
+def _arb(spec: AMMSpec, ports_per_bank: int = 2) -> PortArbiter:
+    return PortArbiter(compile_spec(spec, ports_per_bank), ports_per_bank)
+
+
+# ----------------------------------------------------------------------
+# 1. path tables == functional replay tables
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("depth,levels", [(64, 0), (64, 1), (64, 2),
+                                          (256, 3), (96, 1)])
+def test_ntx_tables_match_replay_htables(depth, levels):
+    from repro.core.amm.replay import h_tables
+
+    direct, offset, parity = ntx_tables(depth, levels)
+    tb = h_tables(depth, levels)
+    np.testing.assert_array_equal(direct, tb.direct.astype(np.int64))
+    np.testing.assert_array_equal(offset, tb.offset.astype(np.int64))
+    np.testing.assert_array_equal(parity, tb.parity_paths.astype(np.int64))
+
+
+# ----------------------------------------------------------------------
+# 2. descriptor compilation
+# ----------------------------------------------------------------------
+def test_descriptor_per_kind_fields():
+    d = compile_spec(AMMSpec("multipump", 2, 2, 64))
+    assert (d.rd, d.wr, d.clock_ratio, d.slots) == (2, 2, 2, 4)
+
+    d = compile_spec(AMMSpec("lvt", 4, 2, 64))
+    assert d.write_broadcast == 4 and d.slots == 6
+
+    d = compile_spec(AMMSpec("remap", 4, 2, 64))
+    assert d.n_banks == 3                      # n_write + 1 steering banks
+
+    d = compile_spec(AMMSpec("hb_ntx", 4, 2, 64))
+    assert (d.levels, d.n_leaves, d.half, d.tree_depth) == (2, 9, 32, 32)
+
+    d = compile_spec(AMMSpec("h_ntx_rd", 4, 1, 64, n_banks=4))
+    assert (d.levels, d.n_leaves, d.tree_depth, d.sub) == (2, 9, 64, 4)
+
+    # seed max_failed formula must survive for the golden-pinned kinds
+    d = compile_spec(AMMSpec("banked", 8, 8, 256, n_banks=8), 2)
+    assert d.max_failed == 4 * 8 * 2 + 8
+    d = compile_spec(AMMSpec("ideal", 2, 2, 64), 2)
+    assert d.max_failed == 4 * 1 * 2 + 8
+
+
+# ----------------------------------------------------------------------
+# 3. remap steering == functional replay steering
+# ----------------------------------------------------------------------
+def test_remap_steering_matches_replay():
+    from repro.core.amm import replay as rp
+
+    spec = AMMSpec("remap", 2, 2, 64)
+    n_cycles, n_write = 300, spec.n_write
+    rng = np.random.default_rng(7)
+    wa = rng.integers(0, spec.depth, (n_cycles, n_write)).astype(np.int32)
+    wv = rng.integers(0, 2**32, (n_cycles, n_write), dtype=np.uint32)
+    wm = np.ones((n_cycles, n_write), bool)
+    ra = np.zeros((n_cycles, spec.n_read), np.int32)
+
+    state, res = rp.replay(spec, rp.init_flat(spec), ra, wa, wv, wm)
+    arb = _arb(spec)
+    for t in range(n_cycles):
+        arb.begin_cycle()
+        for p in range(n_write):
+            bank = arb.write(int(wa[t, p]))
+            assert bank is not None, (t, p)
+            assert bank == int(res.write_banks[t, p]), (t, p)
+    np.testing.assert_array_equal(np.asarray(arb.map),
+                                  np.asarray(state["map"]))
+
+
+def test_remap_no_two_writes_share_a_bank():
+    spec = AMMSpec("remap", 2, 3, 64)
+    arb = _arb(spec)
+    rng = np.random.default_rng(3)
+    for _ in range(200):
+        arb.begin_cycle()
+        banks = [arb.write(int(a)) for a in rng.integers(0, 64, 3)]
+        assert None not in banks
+        assert len(set(banks)) == 3            # steering keeps banks disjoint
+
+
+def test_remap_reads_serialize_on_live_bank():
+    """All words start live in bank 0: a 4R config only gets
+    ports_per_bank reads per cycle until writes spread the map."""
+    tb = TraceBuilder("remap_reads")
+    a = tb.declare_array("a", 4)
+    for i in range(16):
+        tb.load(a, i)
+    tr = tb.build()
+    res = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("remap", 4, 2, 64)}, fu_counts={}))
+    assert res.cycles >= 8                     # 2 ports on the live bank
+    assert res.bank_conflict_stalls > 0
+    ideal = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("ideal", 4, 2, 64)}, fu_counts={}))
+    assert ideal.cycles < res.cycles
+
+
+# ----------------------------------------------------------------------
+# 4. write pairing == functional conflict condition
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kind,n_read", [("b_ntx_wr", 1), ("hb_ntx", 4)])
+def test_write_pair_rmws_match_functional_conflicts(kind, n_read):
+    spec = AMMSpec(kind, n_read, 2, 64)
+    half = spec.depth // 2
+    rng = np.random.default_rng(11)
+    wa = rng.integers(0, spec.depth, (400, 2))
+    arb = _arb(spec)
+    for t in range(wa.shape[0]):
+        arb.begin_cycle()
+        assert arb.write(int(wa[t, 0])) is not None
+        assert arb.write(int(wa[t, 1])) is not None  # pairs never stall
+    # the models' conflict condition: both writes land in the same half
+    expected = int(np.sum((wa[:, 0] >= half) == (wa[:, 1] >= half)))
+    assert arb.write_pair_rmws == expected
+
+
+def test_pair_rmw_blocked_by_ref_read():
+    """The Ref re-pointing flow reads the other bank + Ref; a datapath
+    read holding the Ref read port this cycle stalls the pair."""
+    spec = AMMSpec("b_ntx_wr", 1, 2, 64)
+    arb = _arb(spec)
+    arb.begin_cycle()
+    assert arb.read(3)                         # half 0: uses s0 + ref ports
+    assert arb.write(5) == 0                   # plain write, half 0
+    assert arb.write(9) is None                # pair needs ref read: busy
+    arb.begin_cycle()
+    assert arb.write(5) == 0
+    assert arb.write(9) == 0                   # no read -> re-point succeeds
+    assert arb.write_pair_rmws == 1
+
+
+# ----------------------------------------------------------------------
+# 5. parity-path fan-out
+# ----------------------------------------------------------------------
+def test_h_ntx_parity_fanout_and_stall():
+    spec = AMMSpec("h_ntx_rd", 2, 1, 64)       # k=1: 3 leaves
+    arb = _arb(spec)
+    arb.begin_cycle()
+    assert arb.read(0)                         # direct leaf b0
+    assert arb.read(1)                         # same leaf -> parity {b1,ref}
+    assert arb.parity_path_reads == 1
+    assert not arb.read(2)                     # direct & parity both busy
+    arb.begin_cycle()
+    assert arb.read(0) and arb.read(40)        # different leaves: both direct
+    assert arb.parity_path_reads == 1          # unchanged
+
+
+def test_sub_banking_relaxes_leaf_conflicts():
+    plain = AMMSpec("h_ntx_rd", 2, 1, 64)
+    sub = AMMSpec("h_ntx_rd", 2, 1, 64, n_banks=4)
+    a_plain, a_sub = _arb(plain), _arb(sub)
+    a_plain.begin_cycle()
+    a_sub.begin_cycle()
+    # addresses 0 and 1 share the direct leaf but not the sub-bank
+    assert a_plain.read(0) and a_plain.read(1)
+    assert a_plain.parity_path_reads == 1      # served via parity fan-out
+    assert a_sub.read(0) and a_sub.read(1)
+    assert a_sub.parity_path_reads == 0        # both direct
+
+
+def test_hb_sub_banking_reduces_parity_stalls_in_schedule():
+    pt = prepare_trace(get_trace("gemm_ncubed"))
+
+    def run(dp):
+        specs = {aid: _spec_for(dp, pt.array_depths[aid],
+                                pt.trace.word_bytes[aid] * 8)
+                 for aid in pt.trace.array_names}
+        return schedule(pt, ScheduleConfig(
+            mem=specs, fu_counts={k: v * 4 for k, v in _BASE_FU.items()}))
+
+    plain = run(DesignPoint("hb_ntx", 4, 2))
+    banked = run(DesignPoint("hb_ntx", 4, 2, n_banks=4))
+    assert banked.parity_fanout_stalls < plain.parity_fanout_stalls
+    assert banked.cycles <= plain.cycles
+
+
+# ----------------------------------------------------------------------
+# 6. multipump pumped-slot semantics
+# ----------------------------------------------------------------------
+def test_multipump_delivers_advertised_ports_only():
+    tb = TraceBuilder("mp")
+    a = tb.declare_array("a", 4)
+    for i in range(16):
+        tb.load(a, i)
+    tr = tb.build()
+    mp = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("multipump", 2, 2, 64)}, fu_counts={},
+        mem_latency=1))
+    ideal = schedule(tr, ScheduleConfig(
+        mem={0: AMMSpec("ideal", 2, 2, 64)}, fu_counts={}, mem_latency=1))
+    assert mp.cycles == ideal.cycles           # 2R2W, not the seed's 4R4W
+    assert mp.cycles >= 8                      # 16 loads / 2 read ports
+
+
+# ----------------------------------------------------------------------
+# 7. C and Python cycle loops agree on every kind
+# ----------------------------------------------------------------------
+_ALL_KINDS = (
+    DesignPoint("ideal", 2, 2),
+    DesignPoint("banked", 1, 1, 8),
+    DesignPoint("multipump", 2, 2),
+    DesignPoint("h_ntx_rd", 4, 1),
+    DesignPoint("h_ntx_rd", 4, 1, n_banks=4),
+    DesignPoint("b_ntx_wr", 1, 2),
+    DesignPoint("hb_ntx", 2, 2),
+    DesignPoint("hb_ntx", 4, 2, n_banks=4),
+    DesignPoint("lvt", 4, 2),
+    DesignPoint("remap", 4, 2),
+)
+
+
+@pytest.mark.parametrize("bench", ["gemm_ncubed", "md_knn"])
+def test_c_and_python_loops_agree_on_all_kinds(bench):
+    fast = _cycle_ext.load()
+    if fast is None:
+        pytest.skip("no C compiler available; python loop is the only path")
+    pt = prepare_trace(get_trace(bench))
+    for dp in _ALL_KINDS:
+        specs = {aid: _spec_for(dp, pt.array_depths[aid],
+                                pt.trace.word_bytes[aid] * 8)
+                 for aid in pt.trace.array_names}
+        for unroll in (1, 4):
+            cfg = ScheduleConfig(
+                mem=specs,
+                fu_counts={k: v * unroll for k, v in _BASE_FU.items()})
+            assert _schedule_c(fast, pt, cfg) == _schedule_py(pt, cfg), \
+                (bench, dp.label, unroll)
+
+
+def test_schedule_is_deterministic_across_paths():
+    """Public schedule() (whatever path it picks) equals the reference."""
+    pt = prepare_trace(get_trace("stencil2d"))
+    dp = DesignPoint("remap", 2, 2)
+    specs = {aid: _spec_for(dp, pt.array_depths[aid],
+                            pt.trace.word_bytes[aid] * 8)
+             for aid in pt.trace.array_names}
+    cfg = ScheduleConfig(mem=specs, fu_counts=_BASE_FU)
+    assert schedule(pt, cfg) == _schedule_py(pt, cfg)

@@ -1,0 +1,124 @@
+"""AMMSpec validation edges and the DSE ``_spec_for`` clamps, plus the
+empty-family guards in the pareto/ratio metrics (ISSUE 3 satellites)."""
+import math
+
+import pytest
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.dse.pareto import design_space_expansion, pareto_front
+from repro.core.dse.ratio import performance_ratio
+from repro.core.dse.sweep import DesignPoint, DSEPoint, _spec_for
+
+
+# ----------------------------------------------------------------------
+# _spec_for clamps
+# ----------------------------------------------------------------------
+def test_banked_bank_clamp_to_quarter_depth():
+    spec = _spec_for(DesignPoint("banked", n_banks=32), depth=64,
+                     width_bits=32)
+    assert spec.n_banks == 16                  # min(32, 64 // 4)
+    assert spec.n_read == 2 * 16 and spec.n_write == 2 * 16
+    tiny = _spec_for(DesignPoint("banked", n_banks=8), depth=2,
+                     width_bits=32)
+    assert tiny.n_banks == 1                   # max(depth // 4, 1)
+
+
+def test_amm_depth_floor_is_4x_ports():
+    spec = _spec_for(DesignPoint("lvt", 8, 2), depth=16, width_bits=32)
+    assert spec.depth == 32                    # max(16, 4 * 8)
+    spec = _spec_for(DesignPoint("hb_ntx", 4, 2), depth=8, width_bits=32)
+    assert spec.depth == 16
+    spec = _spec_for(DesignPoint("lvt", 2, 2), depth=1024, width_bits=32)
+    assert spec.depth == 1024                  # floor only lifts
+
+
+def test_amm_sub_banking_clamped_to_leaf_depth():
+    spec = _spec_for(DesignPoint("hb_ntx", 4, 2, n_banks=64), depth=64,
+                     width_bits=32)
+    # hb 4R: leaves are depth/(2*4) = 8 words -> sub-banking caps at 8
+    assert spec.n_banks == 8
+    spec = _spec_for(DesignPoint("h_ntx_rd", 4, 1, n_banks=2), depth=64,
+                     width_bits=32)
+    assert spec.n_banks == 2                   # under the cap: unclamped
+
+
+# ----------------------------------------------------------------------
+# AMMSpec validation
+# ----------------------------------------------------------------------
+def test_rejects_non_power_of_two_geometry():
+    with pytest.raises(ValueError):
+        AMMSpec("h_ntx_rd", 3, 1, 64)          # read ports must be 2**k
+    with pytest.raises(ValueError):
+        AMMSpec("hb_ntx", 3, 2, 64)
+    with pytest.raises(ValueError):
+        AMMSpec("h_ntx_rd", 4, 1, 18)          # depth % n_read != 0
+    with pytest.raises(ValueError):
+        AMMSpec("b_ntx_wr", 1, 2, 63)          # odd depth
+    with pytest.raises(ValueError):
+        AMMSpec("hb_ntx", 4, 2, 36)            # depth % (2*n_read) != 0
+    with pytest.raises(ValueError):
+        AMMSpec("lvt", 2, 2, 64, n_banks=3)    # sub-banking must be 2**k
+
+
+def test_rejects_fixed_port_structure_violations():
+    with pytest.raises(ValueError):
+        AMMSpec("h_ntx_rd", 2, 2, 64)          # single write port only
+    with pytest.raises(ValueError):
+        AMMSpec("b_ntx_wr", 1, 3, 64)          # exactly 2 write ports
+    with pytest.raises(ValueError):
+        AMMSpec("hb_ntx", 4, 1, 64)
+    with pytest.raises(ValueError):
+        AMMSpec("banked", 2, 2, 64, n_banks=0)
+    with pytest.raises(ValueError):
+        AMMSpec("ideal", 0, 1, 64)
+
+
+def test_rejects_bad_geometry_and_oversub_banking():
+    with pytest.raises(ValueError):
+        AMMSpec("ideal", 1, 1, 0)
+    with pytest.raises(ValueError):
+        AMMSpec("ideal", 1, 1, 64, 0)          # width
+    with pytest.raises(ValueError):
+        AMMSpec("hb_ntx", 4, 2, 64, n_banks=16)  # leaf depth is only 8
+
+
+def test_sub_banked_spec_keeps_storage_and_tables():
+    plain = AMMSpec("hb_ntx", 4, 2, 256)
+    sub = AMMSpec("hb_ntx", 4, 2, 256, n_banks=4)
+    assert sub.storage_bits() == plain.storage_bits()
+    assert sub.leaf_banks() == plain.leaf_banks()
+    assert "sub=4" in sub.describe()
+
+
+# ----------------------------------------------------------------------
+# empty-family guards (pareto / ratio)
+# ----------------------------------------------------------------------
+def _pt(design: str, is_amm: bool, t: float, area: float) -> DSEPoint:
+    return DSEPoint(bench="b", design=design, is_amm=is_amm, unroll=1,
+                    cycles=100, cycle_ns=1.0, time_us=t, area_mm2=area,
+                    power_mw=1.0, bank_conflict_stalls=0,
+                    parity_fanout_stalls=0, write_pair_stalls=0,
+                    avg_mem_parallelism=1.0)
+
+
+def test_design_space_expansion_empty_family_is_nan():
+    amm = [_pt("lvt-2R2W", True, 1.0, 0.1)]
+    banked = [_pt("banked4", False, 2.0, 0.1)]
+    assert math.isnan(design_space_expansion([], amm))
+    assert math.isnan(design_space_expansion(banked, []))
+    assert math.isnan(design_space_expansion([], []))
+    assert design_space_expansion(banked, amm) == pytest.approx(2.0)
+
+
+def test_performance_ratio_empty_inputs_are_nan():
+    assert math.isnan(performance_ratio([]))
+    only_banked = [_pt("banked4", False, 2.0, 0.1)]
+    only_amm = [_pt("lvt-2R2W", True, 1.0, 0.1)]
+    assert math.isnan(performance_ratio(only_banked))
+    assert math.isnan(performance_ratio(only_amm))
+    both = only_banked + only_amm
+    assert math.isfinite(performance_ratio(both))
+
+
+def test_pareto_front_empty_is_empty():
+    assert pareto_front([]) == []
