@@ -3,7 +3,10 @@
 Each module provides: ``Params`` (+ ``TINY``), ``gen_trace(params)`` and
 a runnable JAX implementation.  The four discussion benchmarks of the
 paper (Fig 4) are fft_strided, gemm_ncubed, kmp, md_knn; sort_merge,
-stencil2d and aes widen the locality spread for the Fig-5 analysis.
+stencil2d and aes widen the locality spread for the Fig-5 analysis, and
+the irregular MachSuite kernels — spmv_crs, bfs_queue, nw, viterbi,
+radix_sort — populate its low/mid-locality end (sparse gathers, graph
+traversal, DP wavefronts, backpointer chases, counting scatters).
 
 ``get_trace`` is the preferred entry point: trace generation is pure in
 the benchmark parameters, so generated traces are memoized at module
@@ -20,7 +23,8 @@ import os
 from collections.abc import Mapping
 
 _BENCH_NAMES = ("fft_strided", "gemm_ncubed", "kmp", "md_knn",
-                "sort_merge", "stencil2d", "aes")
+                "sort_merge", "stencil2d", "aes",
+                "spmv_crs", "bfs_queue", "nw", "viterbi", "radix_sort")
 
 
 class _LazyRegistry(Mapping):

@@ -1,0 +1,141 @@
+"""NW (MachSuite nw/needwun): Needleman-Wunsch global sequence alignment.
+
+Dynamic-programming wavefront over an int32 score matrix: every cell
+reads its diagonal/up/left neighbours (unit and row-pitch strides) plus
+one byte of each sequence, then writes score + traceback pointer.  A
+byte-oriented sequence scan keeps part of the stream stride-one, so NW
+sits mid-spread on the Fig-5 locality axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core._lazy import lazy_import
+
+jax = lazy_import("jax")
+jnp = lazy_import("jax.numpy")
+import numpy as np
+
+from repro.core.sim import trace as T
+
+MATCH, MISMATCH, GAP = 1, -1, -1
+ALIGN, SKIP_UP, SKIP_LEFT = 0, 1, 2    # traceback pointer codes
+
+
+@dataclasses.dataclass(frozen=True)
+class Params:
+    alen: int = 64           # MachSuite: ALEN = BLEN = 128
+    blen: int = 64
+    seed: int = 29
+
+
+TINY = Params(alen=12, blen=12)
+
+
+def make_inputs(p: Params) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(p.seed)
+    return {
+        "seq_a": rng.integers(0, 4, size=p.alen).astype(np.uint8),
+        "seq_b": rng.integers(0, 4, size=p.blen).astype(np.uint8),
+    }
+
+
+def _cell(diag: int, up: int, left: int, match: bool) -> tuple[int, int]:
+    """Score + pointer for one DP cell (diag > up > left tie order)."""
+    d = diag + (MATCH if match else MISMATCH)
+    u = up + GAP
+    l = left + GAP
+    if d >= u and d >= l:
+        return d, ALIGN
+    if u >= l:
+        return u, SKIP_UP
+    return l, SKIP_LEFT
+
+
+def run_np(seq_a: np.ndarray, seq_b: np.ndarray) -> tuple[np.ndarray,
+                                                          np.ndarray]:
+    """Full DP fill; returns (score matrix, traceback pointers), both
+    ``[blen+1, alen+1]``."""
+    a_n, b_n = seq_a.shape[0], seq_b.shape[0]
+    m = np.zeros((b_n + 1, a_n + 1), np.int32)
+    ptr = np.zeros((b_n + 1, a_n + 1), np.int8)
+    m[0, :] = GAP * np.arange(a_n + 1)
+    m[:, 0] = GAP * np.arange(b_n + 1)
+    for b in range(1, b_n + 1):
+        for a in range(1, a_n + 1):
+            s, d = _cell(int(m[b - 1, a - 1]), int(m[b - 1, a]),
+                         int(m[b, a - 1]), seq_a[a - 1] == seq_b[b - 1])
+            m[b, a] = s
+            ptr[b, a] = d
+    return m, ptr
+
+
+def run_jax(seq_a: jnp.ndarray, seq_b: jnp.ndarray) -> tuple[jnp.ndarray,
+                                                             jnp.ndarray]:
+    """Row scan (outer) x carried-left scan (inner); bit-identical to
+    :func:`run_np` including the diag > up > left tie order."""
+    a_n = seq_a.shape[0]
+    row0 = GAP * jnp.arange(a_n + 1, dtype=jnp.int32)
+
+    def fill_row(carry, bc):
+        prev_row, b_idx = carry
+        first = GAP * (b_idx + 1)
+
+        def cell(left, xs):
+            diag, up, a_char = xs
+            d = diag + jnp.where(a_char == bc, MATCH, MISMATCH)
+            u = up + GAP
+            l = left + GAP
+            s = jnp.where((d >= u) & (d >= l), d, jnp.where(u >= l, u, l))
+            p = jnp.where((d >= u) & (d >= l), ALIGN,
+                          jnp.where(u >= l, SKIP_UP, SKIP_LEFT))
+            return s, (s, p.astype(jnp.int8))
+
+        _, (scores, ptrs) = jax.lax.scan(
+            cell, first, (prev_row[:-1], prev_row[1:],
+                          seq_a.astype(jnp.int32)))
+        row = jnp.concatenate([first[None], scores])
+        return (row, b_idx + 1), (row, jnp.concatenate(
+            [jnp.zeros(1, jnp.int8), ptrs]))
+
+    (_, _), (rows, ptr_rows) = jax.lax.scan(
+        fill_row, (row0, jnp.int32(0)), seq_b.astype(jnp.int32))
+    m = jnp.concatenate([row0[None], rows])
+    ptr = jnp.concatenate([jnp.zeros((1, a_n + 1), jnp.int8), ptr_rows])
+    return m, ptr
+
+
+def gen_trace(p: Params = Params()) -> T.Trace:
+    inp = make_inputs(p)
+    seq_a, seq_b = inp["seq_a"], inp["seq_b"]
+    width = p.alen + 1
+    tb = T.TraceBuilder("nw")
+    SEQA = tb.declare_array("seqA", 1)
+    SEQB = tb.declare_array("seqB", 1)
+    M = tb.declare_array("M", 4)
+    PTR = tb.declare_array("ptr", 1)    # char traceback codes (MachSuite)
+    last_m: dict[int, int] = {}
+    # boundary row/column initialisation
+    for a in range(width):
+        last_m[a] = tb.store(M, a)
+    for b in range(1, p.blen + 1):
+        last_m[b * width] = tb.store(M, b * width)
+    for b in range(1, p.blen + 1):
+        for a in range(1, p.alen + 1):
+            la = tb.load(SEQA, a - 1)
+            lb = tb.load(SEQB, b - 1)
+            cmp = tb.op(T.ICMP, la, lb)
+            ld = tb.load(M, (b - 1) * width + (a - 1),
+                         (last_m[(b - 1) * width + a - 1],))
+            lu = tb.load(M, (b - 1) * width + a,
+                         (last_m[(b - 1) * width + a],))
+            ll = tb.load(M, b * width + (a - 1),
+                         (last_m[b * width + a - 1],))
+            s0 = tb.op(T.IADD, ld, cmp)
+            s1 = tb.op(T.IADD, lu)
+            s2 = tb.op(T.IADD, ll)
+            mx = tb.op(T.ICMP, s0, s1)
+            mx = tb.op(T.ICMP, mx, s2)
+            last_m[b * width + a] = tb.store(M, b * width + a, (mx,))
+            tb.store(PTR, b * width + a, (mx,))
+    return tb.build()

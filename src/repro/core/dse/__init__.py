@@ -1,6 +1,6 @@
 from repro.core.dse.pareto import (cost_at_time, design_space_expansion,
                                    pareto_front)
-from repro.core.dse.ratio import performance_ratio
+from repro.core.dse.ratio import performance_ratio, spearman_rho
 from repro.core.dse.runner import SweepCache, point_key, run_sweep
 from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
                                   DesignPoint, DSEPoint, evaluate_point,
@@ -11,5 +11,5 @@ __all__ = [
     "run_sweep", "SweepCache", "point_key",
     "DEFAULT_DESIGNS", "DEFAULT_UNROLLS",
     "pareto_front", "cost_at_time", "design_space_expansion",
-    "performance_ratio",
+    "performance_ratio", "spearman_rho",
 ]

@@ -136,9 +136,12 @@ _WORKER_MEMO_MAX = 8
 _LARGE_TRACE_NODES = 50_000
 
 # One long-lived pool per process, sized on first use; recreated only if
-# a later sweep asks for more workers.
+# a later sweep asks for more workers.  shutdown_pool() is registered
+# via atexit on first creation so the interpreter never exits with live
+# worker processes.
 _POOL: "ProcessPoolExecutor | None" = None
 _POOL_WORKERS = 0
+_ATEXIT_REGISTERED = False
 
 
 def _worker_memoize(fingerprint: str, tr: T.Trace) -> PreparedTrace:
@@ -170,14 +173,20 @@ def _bare_trace(tr: T.Trace) -> T.Trace:
 
 
 def _get_pool(jobs: int) -> "ProcessPoolExecutor":
+    import atexit
     from concurrent.futures import ProcessPoolExecutor
 
-    global _POOL, _POOL_WORKERS
+    global _POOL, _POOL_WORKERS, _ATEXIT_REGISTERED
     if _POOL is None or _POOL_WORKERS < jobs:
         if _POOL is not None:
-            _POOL.shutdown(wait=False)
+            # drain the old pool before replacing it: shutdown(wait=False)
+            # would abandon its workers mid-chunk and leak the processes
+            _POOL.shutdown(wait=True)
         _POOL = ProcessPoolExecutor(max_workers=jobs)
         _POOL_WORKERS = jobs
+        if not _ATEXIT_REGISTERED:
+            atexit.register(shutdown_pool)
+            _ATEXIT_REGISTERED = True
     return _POOL
 
 
@@ -321,14 +330,14 @@ def main(argv: "Sequence[str] | None" = None) -> None:
                     cache=cache)
     t_sweep = time.perf_counter() - t0
 
-    print("bench,design,unroll,cycles,time_us,area_mm2,power_mw,"
-          "bank_conflict_stalls,parity_fanout_stalls,write_pair_stalls,"
-          "avg_mem_parallelism")
+    # header and rows both derive from DSEPoint.row(): new fields (e.g.
+    # cycle_ns) appear in the CSV automatically instead of drifting
+    cols = [f.name for f in dataclasses.fields(DSEPoint)]
+    print(",".join(cols))
     for p in pts:
-        print(f"{p.bench},{p.design},{p.unroll},{p.cycles},"
-              f"{p.time_us:.4f},{p.area_mm2:.5f},{p.power_mw:.2f},"
-              f"{p.bank_conflict_stalls},{p.parity_fanout_stalls},"
-              f"{p.write_pair_stalls},{p.avg_mem_parallelism:.3f}")
+        row = p.row()
+        print(",".join(f"{row[c]:.6g}" if isinstance(row[c], float)
+                       else str(row[c]) for c in cols))
 
     banking = [p for p in pts if not p.is_amm]
     amm = [p for p in pts if p.is_amm]

@@ -48,22 +48,35 @@ _SPATIAL_JAX_JIT = None
 
 def spatial_locality_jax(addrs_bytes) -> "jax.Array":
     """JAX twin of :func:`spatial_locality_np` (jit-compiled on first use,
-    so importing this module does not pull in jax)."""
+    so importing this module does not pull in jax).
+
+    Robust to disabled x64: host arrays are differenced in exact int64
+    *before* they reach the device (transferring raw int64 byte
+    addresses under ``jax_enable_x64=False`` silently truncates them to
+    int32, wrapping addresses above 2**31 into garbage strides), and the
+    reciprocal is taken on float64-cast strides.
+    """
     global _SPATIAL_JAX_JIT
     if _SPATIAL_JAX_JIT is None:
         @jax.jit
-        def _impl(a):
-            a = a.astype(jnp.int64)
-            strides = jnp.abs(jnp.diff(a))
-            contrib = jnp.where(strides > 0, 1.0 / jnp.maximum(strides, 1), 0.0)
-            n = jnp.maximum(a.shape[0] - 1, 1)
-            return jnp.sum(contrib) / n
+        def _impl(strides, n_transitions):
+            # float64 when x64 is enabled, float32 otherwise (the exact
+            # int64 differencing already happened host-side)
+            strides = jnp.abs(strides).astype(jnp.result_type(float))
+            contrib = jnp.where(strides > 0,
+                                1.0 / jnp.maximum(strides, 1.0), 0.0)
+            return jnp.sum(contrib) / jnp.maximum(n_transitions, 1)
         _SPATIAL_JAX_JIT = _impl
-    return _SPATIAL_JAX_JIT(addrs_bytes)
+    if isinstance(addrs_bytes, jax.Array):
+        strides = jnp.diff(addrs_bytes)
+    else:
+        strides = np.diff(np.asarray(addrs_bytes, np.int64)).astype(
+            np.float64)
+    return _SPATIAL_JAX_JIT(strides, strides.shape[0])
 
 
-def per_array_locality(addrs_bytes: np.ndarray, array_ids: np.ndarray,
-                       weights: bool = True) -> dict[int, float]:
+def per_array_locality(addrs_bytes: np.ndarray,
+                       array_ids: np.ndarray) -> dict[int, float]:
     """L_spatial per logical array, as Aladdin partitions per array."""
     out: dict[int, float] = {}
     for aid in np.unique(array_ids):

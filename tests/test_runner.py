@@ -137,13 +137,65 @@ def test_conflict_free_design_reports_zero_stalls():
 
 
 # ----------------------------------------------------------------------
+# pool lifecycle
+# ----------------------------------------------------------------------
+def test_pool_growth_drains_old_pool_and_registers_atexit(monkeypatch):
+    """Growing the shared pool must wait on the old one (not abandon its
+    workers) and the first pool must register the atexit teardown."""
+    import atexit
+
+    registered = []
+    real_register = atexit.register
+
+    def spy(fn, *args, **kwargs):
+        # wrap, don't replace: the first executor in the process makes
+        # multiprocessing lazily register its own exit hook through here
+        registered.append(fn)
+        return real_register(fn, *args, **kwargs)
+
+    monkeypatch.setattr(runner_mod, "_POOL", None)
+    monkeypatch.setattr(runner_mod, "_POOL_WORKERS", 0)
+    monkeypatch.setattr(runner_mod, "_ATEXIT_REGISTERED", False)
+    monkeypatch.setattr(atexit, "register", spy)
+    try:
+        p1 = runner_mod._get_pool(1)
+        assert registered.count(runner_mod.shutdown_pool) == 1
+        p2 = runner_mod._get_pool(2)            # grow: replaces the pool
+        assert p2 is not p1
+        # the old pool was shut down with wait=True: its manager thread
+        # is gone and submitting raises
+        with pytest.raises(RuntimeError):
+            p1.submit(id, 0)
+        assert registered.count(runner_mod.shutdown_pool) == 1  # only once
+        assert runner_mod._get_pool(1) is p2    # shrink request: reuse
+    finally:
+        runner_mod.shutdown_pool()
+
+
+def test_shutdown_pool_resets_state():
+    runner_mod._get_pool(1)
+    runner_mod.shutdown_pool()
+    assert runner_mod._POOL is None and runner_mod._POOL_WORKERS == 0
+    runner_mod.shutdown_pool()                  # idempotent
+
+
+# ----------------------------------------------------------------------
 # CLI
 # ----------------------------------------------------------------------
 def test_runner_cli_smoke(tmp_path, capsys):
+    import dataclasses
+
+    from repro.core.dse import DSEPoint
+
     runner_mod.main(["--bench", "gemm_ncubed", "--jobs", "1",
                      "--unrolls", "1", "--cache-dir", str(tmp_path)])
     out = capsys.readouterr().out
     lines = [l for l in out.splitlines() if l and not l.startswith("#")]
-    assert lines[0].startswith("bench,design,unroll,cycles")
+    # header and rows derive from DSEPoint.row(): every field present,
+    # none drifting (the old hand-written header omitted cycle_ns)
+    fields = [f.name for f in dataclasses.fields(DSEPoint)]
+    assert lines[0] == ",".join(fields)
+    assert "cycle_ns" in lines[0]
     assert len(lines) == 1 + len(DEFAULT_DESIGNS)
+    assert all(len(l.split(",")) == len(fields) for l in lines[1:])
     assert "# cache:" in out

@@ -52,6 +52,17 @@ def test_locality_bounded(addrs):
     assert 0.0 <= v <= 1.0 + 1e-9
 
 
+def test_locality_jax_survives_addresses_beyond_int32():
+    """Byte addresses above 2**31 must not wrap when jax x64 is disabled
+    (regression: the old implementation shipped raw int64 addresses to
+    the device, truncating them to int32 garbage strides)."""
+    base = np.int64(2) ** 40
+    addrs = base + np.arange(0, 8000, 8, dtype=np.int64)
+    np_val = spatial_locality_np(addrs)
+    assert abs(np_val - 1 / 8) < 1e-6
+    assert abs(float(spatial_locality_jax(addrs)) - np_val) < 1e-5
+
+
 # ----------------------------------------------------------------------
 # cost model
 # ----------------------------------------------------------------------

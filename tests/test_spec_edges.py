@@ -1,12 +1,13 @@
 """AMMSpec validation edges and the DSE ``_spec_for`` clamps, plus the
-empty-family guards in the pareto/ratio metrics (ISSUE 3 satellites)."""
+empty-family guards and sampling-range semantics of the pareto/ratio
+metrics."""
 import math
 
 import pytest
 
 from repro.core.amm.spec import AMMSpec
 from repro.core.dse.pareto import design_space_expansion, pareto_front
-from repro.core.dse.ratio import performance_ratio
+from repro.core.dse.ratio import performance_ratio, spearman_rho
 from repro.core.dse.sweep import DesignPoint, DSEPoint, _spec_for
 
 
@@ -122,3 +123,56 @@ def test_performance_ratio_empty_inputs_are_nan():
 
 def test_pareto_front_empty_is_empty():
     assert pareto_front([]) == []
+
+
+# ----------------------------------------------------------------------
+# performance_ratio sampling range (regression: flat-tail padding)
+# ----------------------------------------------------------------------
+def test_performance_ratio_clamps_to_common_overlap():
+    """Two hand-built fronts whose area advantage is exactly 2x over the
+    common reachable range [1, 4]us.  The banking family has one extra
+    very slow point at 100us: sampling up to max(maxima) = 100us (the
+    old bug) would pad the geomean with both fronts' flat tails and drag
+    the result below the true constant 2.0."""
+    banking = [_pt("banked1", False, 1.0, 8.0),
+               _pt("banked2", False, 2.0, 4.0),
+               _pt("banked4", False, 4.0, 2.0),
+               _pt("banked8", False, 100.0, 1.0)]
+    amm = [_pt("lvt-2R2W", True, 1.0, 4.0),
+           _pt("lvt-4R2W", True, 2.0, 2.0),
+           _pt("hb_ntx-2R2W", True, 4.0, 1.0)]
+    assert performance_ratio(banking + amm) == pytest.approx(2.0)
+
+
+def test_performance_ratio_disjoint_ranges_use_degenerate_fallback():
+    """Families whose reachable time ranges barely overlap fall back to
+    a point sample at the slower family's fastest time."""
+    banking = [_pt("banked1", False, 4.0, 6.0)]
+    amm = [_pt("lvt-2R2W", True, 1.0, 3.0)]
+    # overlap degenerates to t_lo == 4.0: banking area 6 vs amm area 3
+    assert performance_ratio(banking + amm) == pytest.approx(2.0)
+
+
+# ----------------------------------------------------------------------
+# spearman_rho (the Fig-5 rank-correlation summary)
+# ----------------------------------------------------------------------
+def test_spearman_monotone_sequences():
+    x = [0.1, 0.2, 0.3, 0.5, 0.9]
+    assert spearman_rho(x, [2.0, 3.0, 5.0, 7.0, 9.0]) == pytest.approx(1.0)
+    assert spearman_rho(x, [9.0, 7.0, 5.0, 3.0, 2.0]) == pytest.approx(-1.0)
+
+
+def test_spearman_is_rank_based_and_skips_nonfinite():
+    # non-linear but monotone -> still exactly -1
+    x = [1.0, 2.0, 3.0, 4.0]
+    y = [1000.0, 1.0, 0.5, 0.01]
+    assert spearman_rho(x, y) == pytest.approx(-1.0)
+    # nan pairs are dropped, not propagated
+    assert spearman_rho(x + [5.0], y + [float("nan")]) \
+        == pytest.approx(-1.0)
+
+
+def test_spearman_degenerate_inputs_are_nan():
+    assert math.isnan(spearman_rho([1.0, 2.0], [3.0, 4.0]))
+    assert math.isnan(spearman_rho([1.0, 1.0, 1.0], [1.0, 2.0, 3.0]))
+    assert math.isnan(spearman_rho([], []))
