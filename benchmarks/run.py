@@ -6,6 +6,7 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   tab_synthesis     — AMM design cost table (Sec III-A synthesis results)
   kernel_microbench — Pallas kernels (interpret mode; TPU is the target)
   scheduler_microbench — C cycle loop vs pure-Python fallback (large trace)
+  scheduler_batched — batched JAX grid vs per-point C / python loops
   lm_smoke_bench    — tiny-arch train/decode step wall times (CPU)
 
 Full-size runs: ``python -m benchmarks.run --full`` (minutes).
@@ -28,6 +29,7 @@ import numpy as np
 FULL = False
 JOBS = os.cpu_count() or 1
 CACHE_DIR = None
+BACKEND = "auto"  # scheduler cycle-loop backend for the DSE tables
 ARTIFACT_DIR = None  # where fig5_locality drops fig5.csv (None = don't)
 ROWS: list[dict] = []  # every _row() call, for --json
 
@@ -59,7 +61,7 @@ def fig4_dse() -> None:
         tr = get_trace(name, full=FULL)
         t0 = time.perf_counter()
         pts = run_sweep(prepare_trace(tr), designs, unrolls,
-                        jobs=JOBS, cache_dir=CACHE_DIR)
+                        jobs=JOBS, cache_dir=CACHE_DIR, backend=BACKEND)
         dt = (time.perf_counter() - t0) * 1e6
         banking = [p for p in pts if not p.is_amm]
         amm = [p for p in pts if p.is_amm]
@@ -112,7 +114,7 @@ def fig5_locality() -> None:
         pt = prepare_trace(tr)
         L = pt.locality
         pts = run_sweep(pt, designs, unrolls, jobs=JOBS,
-                        cache_dir=CACHE_DIR)
+                        cache_dir=CACHE_DIR, backend=BACKEND)
         ratio = performance_ratio(pts)
         exp = design_space_expansion([p for p in pts if not p.is_amm],
                                      [p for p in pts if p.is_amm])
@@ -300,6 +302,74 @@ def scheduler_microbench() -> None:
              f"py_loop_us={py_us:.0f};speedup={py_us / c_us:.1f}x")
 
 
+def scheduler_batched() -> None:
+    """Batched JAX grid evaluation vs the per-point C and pure-Python
+    loops on full gemm Fig-4 design grids.
+
+    One ``schedule_batched`` jit call evaluates the whole 20-design x
+    4-unroll composition grid; the per-point loops evaluate the same
+    configs one call at a time.  Rows record the measured grid-vs-point
+    ratios both ways, and on host CPUs they are a *loss* for the jax
+    engine at every practical size: the deferral scan is sequential
+    (~60-180 pops/cycle) and each XLA while-loop step carries
+    microseconds of overhead vs nanoseconds per C pop, which vmap
+    amortizes across lanes but cannot eliminate.  The rows exist to
+    keep that trade-off measured and honest across PRs; the jax path's
+    value is the three-way conformance matrix + accelerator scale-out,
+    not host-CPU wall time.  See README "Execution backends".
+    """
+    from repro.core.bench import BENCHMARKS, get_trace
+    from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
+                                      schedule_config_for)
+    from repro.core.sim import _cycle_ext, prepare_trace
+    from repro.core.sim.jax_cycle import schedule_batched
+    from repro.core.sim.scheduler import _schedule_c, _schedule_py
+
+    # TINY-size trace: the batched engine's sequential deferral scan
+    # makes larger traces impractically slow on host CPUs (the point of
+    # this table is to measure that honestly, not to hide it)
+    params = BENCHMARKS["gemm_ncubed"].Params(n=8) if FULL \
+        else BENCHMARKS["gemm_ncubed"].Params(n=6)
+    pt = prepare_trace(get_trace("gemm_ncubed", params))
+    grid = [(dp, u) for dp in DEFAULT_DESIGNS for u in DEFAULT_UNROLLS]
+    cfgs = [schedule_config_for(pt, dp, u) for dp, u in grid]
+
+    t0 = time.perf_counter()
+    res = schedule_batched(pt, cfgs)          # compile + first run
+    compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = schedule_batched(pt, cfgs)
+    jax_us = (time.perf_counter() - t0) * 1e6
+
+    fast = _cycle_ext.load()
+    c_us = float("nan")
+    if fast is not None:
+        t0 = time.perf_counter()
+        c_res = [_schedule_c(fast, pt, cfg) for cfg in cfgs]
+        c_us = (time.perf_counter() - t0) * 1e6
+        if c_res != res:
+            raise RuntimeError("jax grid diverged from the C loop")
+    _row("scheduler_batched.grid_vs_c", jax_us,
+         f"nodes={pt.n_nodes};points={len(cfgs)};c_loop_us={c_us:.0f};"
+         f"jax_vs_c={c_us / jax_us:.3f}x;compile_s={compile_s:.1f}")
+
+    # pure-Python comparison on a subset (the reference loop is slow)
+    sub = [(dp, u) for dp in DEFAULT_DESIGNS[::4] for u in (2, 8)]
+    sub_cfgs = [schedule_config_for(pt, dp, u) for dp, u in sub]
+    jr = schedule_batched(pt, sub_cfgs)
+    t0 = time.perf_counter()
+    jr = schedule_batched(pt, sub_cfgs)
+    jax_sub_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    py_res = [_schedule_py(pt, cfg) for cfg in sub_cfgs]
+    py_us = (time.perf_counter() - t0) * 1e6
+    if py_res != jr:
+        raise RuntimeError("jax grid diverged from the python loop")
+    _row("scheduler_batched.grid_vs_py", jax_sub_us,
+         f"nodes={pt.n_nodes};points={len(sub_cfgs)};"
+         f"py_loop_us={py_us:.0f};jax_vs_py={py_us / jax_sub_us:.1f}x")
+
+
 def lm_smoke_bench() -> None:
     """Tiny-config train/decode step wall time per assigned arch."""
     import jax
@@ -377,6 +447,7 @@ TABLES = {
     "kernel_microbench": kernel_microbench,
     "amm_replay": amm_replay,
     "scheduler_microbench": scheduler_microbench,
+    "scheduler_batched": scheduler_batched,
     "lm_smoke_bench": lm_smoke_bench,
     "grad_sync_bench": grad_sync_bench,
 }
@@ -394,7 +465,7 @@ def _only_list(arg: str | None) -> list[str] | None:
 
 
 def main(argv=None) -> None:
-    global FULL, JOBS, CACHE_DIR, ARTIFACT_DIR
+    global FULL, JOBS, CACHE_DIR, BACKEND, ARTIFACT_DIR
     ap = argparse.ArgumentParser(
         prog="python -m benchmarks.run",
         description="Paper table/figure benchmark harness (CSV to stdout).")
@@ -404,6 +475,9 @@ def main(argv=None) -> None:
                     help=f"run a subset of {sorted(TABLES)}")
     ap.add_argument("--jobs", type=int, default=os.cpu_count() or 1,
                     help="worker processes for DSE sweeps (1 = serial)")
+    ap.add_argument("--backend", choices=("auto", "c", "py", "jax"),
+                    default="auto",
+                    help="scheduler cycle-loop backend for DSE tables")
     ap.add_argument("--cache-dir", default=None,
                     help="on-disk DSE result cache for incremental re-runs")
     ap.add_argument("--artifact-dir", default=None, metavar="DIR",
@@ -415,6 +489,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     only = _only_list(args.only)
     FULL, JOBS, CACHE_DIR = args.full, args.jobs, args.cache_dir
+    BACKEND = args.backend
     ARTIFACT_DIR = args.artifact_dir
 
     print("name,us_per_call,derived")

@@ -1,14 +1,14 @@
 from repro.core.dse.pareto import (cost_at_time, design_space_expansion,
                                    pareto_front)
 from repro.core.dse.ratio import performance_ratio, spearman_rho
-from repro.core.dse.runner import SweepCache, point_key, run_sweep
+from repro.core.dse.runner import BACKENDS, SweepCache, point_key, run_sweep
 from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
                                   DesignPoint, DSEPoint, evaluate_point,
                                   sweep)
 
 __all__ = [
     "DesignPoint", "DSEPoint", "sweep", "evaluate_point",
-    "run_sweep", "SweepCache", "point_key",
+    "run_sweep", "SweepCache", "point_key", "BACKENDS",
     "DEFAULT_DESIGNS", "DEFAULT_UNROLLS",
     "pareto_front", "cost_at_time", "design_space_expansion",
     "performance_ratio", "spearman_rho",

@@ -47,7 +47,13 @@ from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
 # cache entries from older layouts must miss, not deserialize garbage.
 # v2: per-kind arbitration layer (stall breakdown fields; multipump /
 # NTX / remap timing semantics).
-CACHE_VERSION = 2
+# v3: multi-backend execution engine (c / py / jax); entries are
+# backend-independent — the three cycle loops are pinned decision-for-
+# decision equal — but pre-v3 entries predate the conformance harness
+# that enforces it, so they must re-evaluate once.
+CACHE_VERSION = 3
+
+BACKENDS = ("auto", "c", "py", "jax")
 
 _ENV_CACHE_DIR = "REPRO_DSE_CACHE"
 
@@ -158,12 +164,13 @@ def _worker_init(fingerprint: str, tr: T.Trace) -> None:
 def _worker_eval_chunk(
     fingerprint: str, tr: "T.Trace | None",
     chunk: "list[tuple[int, DesignPoint, int]]", mem_latency: int,
+    backend: str = "auto",
 ) -> "list[tuple[int, DSEPoint]]":
     pt = _WORKER_MEMO.get(fingerprint)
     if pt is None:
         assert tr is not None, "large-trace pool must be pre-initialized"
         pt = _worker_memoize(fingerprint, tr)
-    return [(i, evaluate_point(pt, dp, u, mem_latency))
+    return [(i, evaluate_point(pt, dp, u, mem_latency, backend=backend))
             for i, dp, u in chunk]
 
 
@@ -207,6 +214,31 @@ def _chunked(tasks: list, n_chunks: int) -> list[list]:
 # ----------------------------------------------------------------------
 # entry point
 # ----------------------------------------------------------------------
+def _run_batched_jax(
+    pt: PreparedTrace,
+    tasks: "list[tuple[int, DesignPoint, int]]",
+    mem_latency: int,
+    results: "list[DSEPoint | None]",
+    batch_lanes: int = 256,
+) -> None:
+    """Evaluate uncached points through ``jax_cycle.schedule_batched``.
+
+    One jit call per ``batch_lanes`` grid points (bounded device
+    memory); costing happens host-side through the same
+    ``point_from_schedule`` every other backend uses.
+    """
+    from repro.core.dse.sweep import point_from_schedule, schedule_config_for
+    from repro.core.sim.jax_cycle import schedule_batched
+
+    for lo in range(0, len(tasks), batch_lanes):
+        chunk = tasks[lo:lo + batch_lanes]
+        cfgs = [schedule_config_for(pt, dp, u, mem_latency)
+                for _, dp, u in chunk]
+        scheds = schedule_batched(pt, cfgs)
+        for (idx, dp, u), cfg, res in zip(chunk, cfgs, scheds):
+            results[idx] = point_from_schedule(pt, dp, u, cfg, res)
+
+
 def run_sweep(
     tr: "T.Trace | PreparedTrace",
     designs: Sequence[DesignPoint] = DEFAULT_DESIGNS,
@@ -216,6 +248,7 @@ def run_sweep(
     jobs: "int | None" = None,
     cache_dir: "str | Path | None" = None,
     cache: "SweepCache | None" = None,
+    backend: str = "auto",
 ) -> list[DSEPoint]:
     """Evaluate every ``(design, unroll)`` composition on one trace.
 
@@ -228,10 +261,19 @@ def run_sweep(
         in-process; ``>1`` uses a shared process pool with chunked work
         units — but only once the estimated work clears
         ``_MIN_PARALLEL_WORK``, so tiny sweeps stay serial and fast.
+        Ignored by the ``jax`` backend, which batches instead of forking.
       cache_dir: directory for the on-disk result cache (defaults to the
         ``REPRO_DSE_CACHE`` env var; no caching when unset).
       cache: pre-constructed :class:`SweepCache` (overrides cache_dir).
+      backend: scheduler execution backend — ``auto``/``c`` (compiled C
+        loop with pure-Python fallback), ``py`` (reference loop) or
+        ``jax`` (whole-grid ``schedule_batched``; bypasses the process
+        pool, keeps the on-disk cache).  All backends produce bitwise
+        identical points, so cache entries are backend-independent.
     """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
     unrolls = tuple(unrolls)
     pt = prepare_trace(tr)
     if cache is None:
@@ -252,7 +294,9 @@ def run_sweep(
                 tasks.append((idx, dp, u))
 
     n_jobs = jobs or 0
-    if (n_jobs > 1 and len(tasks) > 1
+    if backend == "jax":
+        _run_batched_jax(pt, tasks, mem_latency, results)
+    elif (n_jobs > 1 and len(tasks) > 1
             and len(tasks) * pt.n_nodes >= _MIN_PARALLEL_WORK):
         n_jobs = min(n_jobs, len(tasks))
         chunks = _chunked(tasks, n_jobs * 2)
@@ -265,20 +309,22 @@ def run_sweep(
                     max_workers=n_jobs, initializer=_worker_init,
                     initargs=(pt.fingerprint, bare)) as pool:
                 futs = [pool.submit(_worker_eval_chunk, pt.fingerprint,
-                                    None, c, mem_latency) for c in chunks]
+                                    None, c, mem_latency, backend)
+                        for c in chunks]
                 for fut in futs:
                     for idx, point in fut.result():
                         results[idx] = point
         else:
             pool = _get_pool(n_jobs)
             futs = [pool.submit(_worker_eval_chunk, pt.fingerprint, bare,
-                                c, mem_latency) for c in chunks]
+                                c, mem_latency, backend) for c in chunks]
             for fut in futs:
                 for idx, point in fut.result():
                     results[idx] = point
     else:
         for idx, dp, u in tasks:
-            results[idx] = evaluate_point(pt, dp, u, mem_latency)
+            results[idx] = evaluate_point(pt, dp, u, mem_latency,
+                                          backend=backend)
 
     if cache:
         for idx, _, _ in tasks:
@@ -316,6 +362,9 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     ap.add_argument("--mem-latency", type=int, default=2)
     ap.add_argument("--cache-dir", default=None,
                     help=f"on-disk result cache (or ${_ENV_CACHE_DIR})")
+    ap.add_argument("--backend", choices=BACKENDS, default="auto",
+                    help="cycle-loop backend (jax = one batched jit call "
+                         "for the whole grid, bypassing the process pool)")
     args = ap.parse_args(argv)
 
     tr = get_trace(args.bench, full=args.full)
@@ -327,7 +376,7 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     t0 = time.perf_counter()
     pts = run_sweep(pt, DEFAULT_DESIGNS, args.unrolls,
                     mem_latency=args.mem_latency, jobs=args.jobs,
-                    cache=cache)
+                    cache=cache, backend=args.backend)
     t_sweep = time.perf_counter() - t0
 
     # header and rows both derive from DSEPoint.row(): new fields (e.g.
@@ -343,7 +392,8 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     amm = [p for p in pts if p.is_amm]
     print(f"# nodes={pt.n_nodes} locality={pt.locality:.3f} "
           f"points={len(pts)} prep={t_prep*1e3:.1f}ms "
-          f"sweep={t_sweep*1e3:.1f}ms jobs={args.jobs}")
+          f"sweep={t_sweep*1e3:.1f}ms jobs={args.jobs} "
+          f"backend={args.backend}")
     if banking and amm:
         print(f"# expansion={design_space_expansion(banking, amm):.2f} "
               f"pareto_banked={len(pareto_front(banking))} "

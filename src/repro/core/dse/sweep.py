@@ -134,12 +134,18 @@ def _spec_for(dp: DesignPoint, depth: int, width_bits: int) -> AMMSpec:
                    n_banks=sub)
 
 
-def evaluate_point(
+def schedule_config_for(
     tr: "T.Trace | PreparedTrace",
     dp: DesignPoint,
     unroll: int,
     mem_latency: int = 2,
-) -> DSEPoint:
+) -> ScheduleConfig:
+    """The scheduler configuration one ``(design, unroll)`` point implies.
+
+    Shared by every execution backend: the serial/pooled paths build it
+    inside :func:`evaluate_point`, the batched JAX path builds one per
+    grid point and hands the whole list to ``schedule_batched``.
+    """
     pt = prepare_trace(tr)
     trace = pt.trace
     depths = pt.array_depths
@@ -147,12 +153,40 @@ def evaluate_point(
         aid: _spec_for(dp, depths[aid], trace.word_bytes[aid] * 8)
         for aid in trace.array_names
     }
-    cfg = ScheduleConfig(
+    return ScheduleConfig(
         mem=specs,
         fu_counts={k: v * unroll for k, v in _BASE_FU.items()},
         mem_latency=mem_latency,
     )
-    res = schedule(pt, cfg)
+
+
+def evaluate_point(
+    tr: "T.Trace | PreparedTrace",
+    dp: DesignPoint,
+    unroll: int,
+    mem_latency: int = 2,
+    backend: str = "auto",
+) -> DSEPoint:
+    pt = prepare_trace(tr)
+    cfg = schedule_config_for(pt, dp, unroll, mem_latency)
+    res = schedule(pt, cfg, backend=backend)
+    return point_from_schedule(pt, dp, unroll, cfg, res)
+
+
+def point_from_schedule(
+    tr: "T.Trace | PreparedTrace",
+    dp: DesignPoint,
+    unroll: int,
+    cfg: ScheduleConfig,
+    res,
+) -> DSEPoint:
+    """Fold one ``ScheduleResult`` into a costed :class:`DSEPoint`.
+
+    Deterministic given its inputs, so a point is bitwise identical
+    whichever backend produced the schedule."""
+    pt = prepare_trace(tr)
+    trace = pt.trace
+    specs = cfg.mem
 
     costs = {aid: memory_cost(s) for aid, s in specs.items()}
     cycle_ns = max([_MIN_CYCLE_NS] + [c.cycle_ns for c in costs.values()])
@@ -200,14 +234,17 @@ def sweep(
     mem_latency: int = 2,
     jobs: int | None = None,
     cache_dir: "str | None" = None,
+    backend: str = "auto",
 ) -> list[DSEPoint]:
     """Evaluate ``designs x unrolls`` on one trace.
 
     Thin wrapper over :func:`repro.core.dse.runner.run_sweep`: pass
-    ``jobs`` for multi-process evaluation and ``cache_dir`` for the
-    on-disk result cache.  Point order is always ``designs``-major,
-    ``unrolls``-minor, independent of parallelism or cache hits.
+    ``jobs`` for multi-process evaluation, ``cache_dir`` for the
+    on-disk result cache and ``backend`` to pick the cycle-loop
+    implementation (``auto``/``c``/``py``/``jax``).  Point order is
+    always ``designs``-major, ``unrolls``-minor, independent of
+    parallelism, backend or cache hits.
     """
     from repro.core.dse.runner import run_sweep
     return run_sweep(tr, designs, unrolls, mem_latency=mem_latency,
-                     jobs=jobs, cache_dir=cache_dir)
+                     jobs=jobs, cache_dir=cache_dir, backend=backend)

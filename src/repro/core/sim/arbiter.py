@@ -388,3 +388,66 @@ def descriptor_matrix(descs: "list[ArbDescriptor | None]") -> np.ndarray:
         if d is not None:
             mat[aid] = d.row()
     return np.ascontiguousarray(mat)
+
+
+# ----------------------------------------------------------------------
+# device-tensor export (batched JAX cycle loop)
+# ----------------------------------------------------------------------
+def device_limits(descs: "list[ArbDescriptor | None]",
+                  ) -> tuple[int, int, int, int, int]:
+    """Fixed-shape bounds one design's descriptors need on device.
+
+    Returns ``(scan_slots, key_space, bank_slots, table_depth,
+    parity_paths)``:
+
+    * ``scan_slots`` — max candidates one array's per-cycle deferral
+      scan can pop: every pop either issues (``rd + wr`` cap) or defers
+      (``max_failed`` cap), so the scan never looks further;
+    * ``key_space`` — NTX (tree, leaf, sub-bank) port-key ids,
+      ``3 * n_leaves * sub``;
+    * ``bank_slots`` — banked/remap per-cycle bank-usage counters;
+    * ``table_depth`` — words addressed by per-word state (NTX path
+      tables are per ``tree_depth`` word, the remap live map per
+      ``depth`` word);
+    * ``parity_paths`` — widest NTX parity fan-out ``2**levels``.
+    """
+    slots = keys = banks = depth = paths = 0
+    for d in descs:
+        if d is None:
+            continue
+        slots = max(slots, d.rd + d.wr + d.max_failed)
+        banks = max(banks, d.n_banks)
+        if d.kind in _NTX_KINDS:
+            keys = max(keys, 3 * d.n_leaves * d.sub)
+            depth = max(depth, d.tree_depth)
+            paths = max(paths, 1 << d.levels)
+        elif d.kind == KIND_REMAP:
+            depth = max(depth, d.depth)
+    return slots, keys, banks, depth, paths
+
+
+def descriptor_device_tables(
+    descs: "list[ArbDescriptor | None]", n_arrays: int, table_depth: int,
+    parity_paths: int,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Padded per-array NTX leaf-path tables for the JAX cycle loop.
+
+    Returns ``(direct, offset, parity)`` of shapes ``[n_arrays,
+    table_depth]`` / ``[n_arrays, table_depth, parity_paths]`` (int32,
+    zero where an array is not an NTX kind or beyond its tree depth) —
+    the same :func:`ntx_tables` geometry both reference loops use.
+    """
+    a = max(n_arrays, 1)
+    d_pad = max(table_depth, 1)
+    p_pad = max(parity_paths, 1)
+    direct = np.zeros((a, d_pad), np.int32)
+    offset = np.zeros((a, d_pad), np.int32)
+    parity = np.zeros((a, d_pad, p_pad), np.int32)
+    for aid, d in enumerate(descs):
+        if d is None or d.kind not in _NTX_KINDS:
+            continue
+        dr, off, par = ntx_tables(d.tree_depth, d.levels)
+        direct[aid, :d.tree_depth] = dr
+        offset[aid, :d.tree_depth] = off
+        parity[aid, :d.tree_depth, :par.shape[1]] = par
+    return direct, offset, parity

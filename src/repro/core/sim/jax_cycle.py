@@ -1,0 +1,506 @@
+"""Batched JAX cycle loop: the third execution backend of the scheduler.
+
+The port-constrained list scheduler exists as a pure-Python reference
+loop and a compiled C twin (``scheduler._schedule_py`` /
+``_cycle_loop.c``).  Both evaluate one design point per call, so a
+Fig-4 grid is a host-side loop over designs.  This module reformulates
+the *same* decision procedure as fixed-shape array ops — a
+``lax.while_loop`` over cycles whose body issues ready nodes by masked
+priority — so that ``jax.vmap`` batches the whole grid into a single
+compiled call (and, on an accelerator, a single device launch).
+
+Exactness contract
+------------------
+``schedule_batched`` is pinned decision-for-decision against the other
+two loops (``tests/test_conformance.py``, ``tests/test_golden_schedule``):
+
+* ready nodes are scanned in exact heap order per resource class — the
+  class-grouped, ``(-height, node)``-sorted ``DeviceViews.perm`` makes
+  the per-cycle candidate list a masked prefix of a static permutation;
+* the per-kind arbitration rules (banked bank ports, multipump pumped
+  slots, NTX direct/parity leaf paths and Ref write pairing, remap
+  live-bank steering) replicate :class:`~repro.core.sim.arbiter.
+  PortArbiter` branch for branch, driven by the same numeric
+  ``ArbDescriptor`` fields and the same ``ntx_tables`` geometry;
+* deferral-scan caps (``max_failed``), first-deferral stall attribution
+  and the idle-cycle jump are carried over unchanged.
+
+Shapes are static per :class:`StaticCfg` (padded to power-of-two
+buckets), so traces and design grids of similar size share one
+compiled kernel.  State that differs per design — descriptor rows,
+FU budgets, leaf-path tables, the remap live map — is batched along
+the leading design axis; trace tensors are broadcast.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+from typing import TYPE_CHECKING, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.sim.arbiter import (F_CONFIGURED, F_DEPTH, F_HALF, F_KIND,
+                                    F_LEVELS, F_MAXFAIL, F_NBANKS, F_NLEAVES,
+                                    F_RD, F_SLOTS, F_SUB, F_WR, KIND_BANKED,
+                                    KIND_H_NTX, KIND_REMAP, N_FIELDS,
+                                    STALL_BANK, STALL_PAIR, STALL_PARITY,
+                                    _NTX_KINDS, compile_descriptors,
+                                    descriptor_device_tables,
+                                    descriptor_matrix, device_limits)
+from repro.core.sim.prepared import (FU_ORDER, PreparedTrace, _next_pow2,
+                                     prepare_trace)
+
+if TYPE_CHECKING:
+    from repro.core.sim.scheduler import ScheduleConfig, ScheduleResult
+    from repro.core.sim.trace import Trace
+
+I32 = jnp.int32
+_INT32_INF = np.int32(2**31 - 1)
+
+# error codes surfaced from the device loop (host raises to match the
+# reference loops' exceptions)
+ERR_NONE, ERR_MAX_CYCLES, ERR_DEADLOCK, ERR_UNCONFIGURED = 0, 1, 2, 3
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticCfg:
+    """Hashable static-shape key: one compiled kernel per value.
+
+    Only padded dimensions appear here — everything trace- or
+    design-specific (class segment layout, descriptors, leaf tables,
+    the real node count) travels as device data, so similarly-sized
+    traces and any design grid share one compiled kernel.
+    """
+
+    n_pad: int
+    n_preds_max: int
+    a_pad: int                  # array-axis bucket
+    scan_slots: int             # S: per-cycle candidate slots per array
+    key_space: int              # U: NTX port-key ids per array
+    bank_slots: int             # NB: bank-usage counters per array
+    table_depth: int            # D: per-word state (NTX tables, remap map)
+    parity_paths: int           # PP: widest NTX parity fan-out
+
+
+def _steer(wuse_o: jax.Array, ruse_o: jax.Array, valid: jax.Array,
+           ppb) -> tuple[jax.Array, jax.Array]:
+    """Remap write steering: first free bank in live-map scan order.
+
+    ``wuse_o``/``ruse_o`` are this cycle's per-bank usage gathered in
+    scan order (starting from the word's live bank); a bank is free when
+    it has no write yet and a port left — exactly the
+    ``replay._remap_step`` / ``PortArbiter._remap`` rule.  Returns
+    ``(any_free, position)`` along the last axis.
+    """
+    free = (wuse_o == 0) & (ruse_o < ppb) & valid
+    return jnp.any(free, axis=-1), jnp.argmax(free, axis=-1).astype(I32)
+
+
+def remap_write_step(live_map, ruse, wuse, addr, n_banks: int, ppb: int):
+    """One remap write-steering decision, the ``jax_cycle`` rule.
+
+    Single-array view of the kernel's batched steering (same
+    :func:`_steer` core), exposed for the property tests that pin it
+    against ``repro.core.amm.replay._remap_step``.  Returns
+    ``(issued, bank, live_map, ruse, wuse)`` with state untouched when
+    the write stalls.
+    """
+    live_map = jnp.asarray(live_map, I32)
+    ruse = jnp.asarray(ruse, I32)
+    wuse = jnp.asarray(wuse, I32)
+    order = (live_map[addr] + jnp.arange(n_banks, dtype=I32)) % n_banks
+    ok, pos = _steer(wuse[order], ruse[order], jnp.ones(n_banks, bool), ppb)
+    bank = order[pos]
+    tgt = jnp.where(ok, bank, n_banks)          # n_banks = trash slot
+    ruse = jnp.concatenate([ruse, jnp.zeros(1, I32)]).at[tgt].add(1)[:-1]
+    wuse = jnp.concatenate([wuse, jnp.zeros(1, I32)]).at[tgt].set(1)[:-1]
+    live_map = live_map.at[jnp.where(ok, addr, live_map.shape[0] - 1)].set(
+        jnp.where(ok, bank, live_map[live_map.shape[0] - 1]))
+    return ok, jnp.where(ok, bank, -1), live_map, ruse, wuse
+
+
+def _make_lane_fn(sc: StaticCfg):
+    """Single-design cycle loop for one trace shape (vmapped by caller).
+
+    The per-cycle issue phase is two fused stages instead of a Python
+    loop over resource classes: one segmented cumulative-rank pass over
+    the whole priority permutation (top-``budget`` selection for every
+    FU class at once) and one segmented prefix-scatter that lays each
+    array's ready candidates into its scan slots.  The deferral scan
+    then advances every array one pop per ``while_loop`` step — its
+    trip count is the *actual* maximum pop count this cycle, not the
+    worst-case ``scan_slots`` bound.  Class segments arrive as device
+    data (``gid_perm``/``seg_start``), not compile-time constants.
+    """
+    NPAD, A = sc.n_pad, sc.a_pad
+    S = max(sc.scan_slots, 1)
+    U = max(sc.key_space, 1)
+    NB = max(sc.bank_slots, 1)
+    D = max(sc.table_depth, 1)
+    PP = max(sc.parity_paths, 1)
+    TRASH = NPAD + 1                       # NPAD is the always-retired pred
+    arA = jnp.arange(A)
+
+    def lane(desc, fu_budgets, mem_latency, ppb, max_cycles,
+             direct_t, offset_t, parity_t,
+             n_real, preds_pad, lat, is_load, word_idx, perm, gid_perm,
+             seg_start):
+        lat_p = lat[perm]
+        budget_of = jnp.concatenate(
+            [jnp.zeros((A,), I32), fu_budgets.astype(I32),
+             jnp.zeros((1,), I32)])        # mem / FU / pad segment budgets
+        kind = desc[:, F_KIND]
+        configured = desc[:, F_CONFIGURED] > 0
+        n_banks = jnp.maximum(desc[:, F_NBANKS], 1)
+        depth = jnp.maximum(desc[:, F_DEPTH], 1)
+        levels = desc[:, F_LEVELS]
+        half = jnp.maximum(desc[:, F_HALF], 0)
+        sub = jnp.maximum(desc[:, F_SUB], 1)
+        max_failed = desc[:, F_MAXFAIL]
+        nl = jnp.maximum(desc[:, F_NLEAVES], 1)
+        is_h = kind == KIND_H_NTX
+        is_ntx = ((kind == _NTX_KINDS[0]) | (kind == _NTX_KINDS[1])
+                  | (kind == _NTX_KINDS[2]))
+        is_banked = kind == KIND_BANKED
+        is_remap = kind == KIND_REMAP
+        is_simple = ~(is_ntx | is_banked | is_remap)
+        npaths = jnp.left_shift(jnp.int32(1), levels)
+        pcols = jnp.arange(PP, dtype=I32)[None, :]
+
+        def _top(rd, wr, slots, failed, saturated):
+            have = (rd > 0) | (wr > 0)
+            return jnp.where(
+                is_banked,
+                have & (saturated < n_banks) & (failed < max_failed),
+                jnp.where(is_simple, have & (slots > 0),
+                          have & (failed < max_failed)))
+
+        def body(c):
+            (cycle, remaining, finish, issued, delayed, maps, cnt,
+             per_array, err) = c
+            err = jnp.where((err == ERR_NONE) & (cycle > max_cycles),
+                            jnp.int32(ERR_MAX_CYCLES), err)
+            # ---- retire: a node is retired once issued & finish <= cycle
+            finish_r, issued_r = finish[:NPAD], issued[:NPAD]
+            retired = issued_r & (finish_r <= cycle)
+            remaining = n_real - jnp.sum(retired, dtype=I32)
+            ready = (~issued_r) & jnp.all(finish[preds_pad] <= cycle, axis=1)
+            ready_p = ready[perm]
+
+            # ---- one segmented rank pass over the whole priority perm:
+            # top-`budget` issue for every FU class, prefix positions for
+            # every memory class (mem/pad segments carry budget 0)
+            cs0 = jnp.concatenate([jnp.zeros((1,), I32),
+                                   jnp.cumsum(ready_p.astype(I32))])
+            rank = cs0[1:] - cs0[seg_start[gid_perm]]
+            take = ready_p & (rank <= budget_of[gid_perm])
+            tgt = jnp.where(take, perm, TRASH)
+            finish = finish.at[tgt].set(cycle + lat_p)
+            issued = issued.at[tgt].set(True)
+            fu_issue_n = jnp.sum(take, dtype=I32)
+
+            # ---- memory classes: segmented prefix -> per-array scan slots
+            pos = rank - 1
+            slot = jnp.where((gid_perm < A) & ready_p & (pos < S),
+                             gid_perm * (S + 1) + pos, A * (S + 1))
+            cand = jnp.zeros((A * (S + 1) + 1,), I32).at[slot].set(perm)
+            cand = cand[:A * (S + 1)].reshape(A, S + 1)[:, :S]
+            n_ready = cs0[seg_start[1:A + 1]] - cs0[seg_start[:A]]
+            ncand = jnp.minimum(n_ready, S)
+            err = jnp.where(
+                (err == ERR_NONE) & jnp.any((n_ready > 0) & ~configured),
+                jnp.int32(ERR_UNCONFIGURED), err)
+
+            # ---- deferral scan: every array advances one pop per step,
+            # exactly the reference loops' pop/defer/issue procedure
+            def icond(st):
+                j, rd, wr, slots, failed, saturated, stop = st[:7]
+                return jnp.any((j < ncand) & ~stop & configured
+                               & _top(rd, wr, slots, failed, saturated))
+
+            def istep(st):
+                (j, rd, wr, slots, failed, saturated, stop, pair_used,
+                 wr_half, ruse, wuse, use, amap, finish, issued, delayed,
+                 mem_pa, conflict_n, parity_n, pair_n, pr_n, rmw_n) = st
+                act = ((j < ncand) & ~stop & configured
+                       & _top(rd, wr, slots, failed, saturated))
+                node = lax.dynamic_index_in_dim(cand, j, axis=1,
+                                                keepdims=False)
+                ld = is_load[node]
+                w = word_idx[node]
+                dir_defer = jnp.where(ld, rd <= 0, wr <= 0)
+                att = act & ~dir_defer
+                a = w % depth
+                # NTX geometry: tree / in-tree address / leaf / sub-bank
+                tree = jnp.where(is_h, 0, (a >= half).astype(I32))
+                ta = jnp.minimum(a - tree * half, D - 1)
+                leaf = direct_t[arA, ta]
+                soff = offset_t[arA, ta] % sub
+                key1 = (tree * nl + leaf) * sub + soff
+                key2 = (2 * nl + leaf) * sub + soff
+                key_other = ((1 - tree) * nl + leaf) * sub + soff
+                u2 = use[arA, key2]
+                direct_free = ~use[arA, key1] & (is_h | ~u2)
+                pl = parity_t[arA, ta]                         # [A, PP]
+                pvalid = pcols < npaths[:, None]
+                pk_t = (tree[:, None] * nl[:, None] + pl) * sub[:, None] \
+                    + soff[:, None]
+                pk_r = (2 * nl[:, None] + pl) * sub[:, None] + soff[:, None]
+                p_busy = use[arA[:, None], pk_t] \
+                    | (~is_h[:, None] & use[arA[:, None], pk_r])
+                parity_free = ~jnp.any(pvalid & p_busy, axis=1)
+                tree01 = jnp.minimum(tree, 1)
+                first_w = wr_half[arA, tree01] == 0
+                pair_ok = ~pair_used & ~use[arA, key_other] & ~u2
+                ntx_ok = jnp.where(ld, direct_free | parity_free,
+                                   is_h | first_w | pair_ok)
+                # banked
+                bankb = w % n_banks
+                used_b = ruse[arA, bankb]
+                banked_ok = used_b < ppb
+                # remap: live-bank read, first-free-bank write steering
+                mb = amap[arA, jnp.minimum(a, D - 1)]
+                r_ok = ruse[arA, mb] < ppb
+                worder = (mb[:, None] + jnp.arange(NB, dtype=I32)[None, :]) \
+                    % n_banks[:, None]
+                any_wf, wpos = _steer(
+                    wuse[arA[:, None], worder], ruse[arA[:, None], worder],
+                    jnp.arange(NB)[None, :] < n_banks[:, None], ppb)
+                wbank = worder[arA, wpos]
+                remap_ok = jnp.where(ld, r_ok, any_wf)
+                ok = jnp.where(is_banked, banked_ok,
+                               jnp.where(is_remap, remap_ok,
+                                         jnp.where(is_ntx, ntx_ok, True)))
+                issue = att & ok
+                defer = att & ~ok
+                cause = jnp.where(is_ntx & ld, STALL_PARITY,
+                                  jnp.where(is_ntx, STALL_PAIR, STALL_BANK))
+                # budgets / scan caps
+                rd = rd - (issue & ld).astype(I32)
+                wr = wr - (issue & ~ld).astype(I32)
+                slots = slots - (issue & is_simple).astype(I32)
+                failed = failed + ((act & dir_defer) | defer).astype(I32)
+                stop = stop | (is_simple & act & dir_defer
+                               & (failed >= max_failed))
+                # per-kind structural state (one scatter per state array)
+                bsel = issue & is_banked
+                saturated = saturated + (bsel & (used_b + 1 == ppb)) \
+                    .astype(I32)
+                rd_direct = issue & is_ntx & ld & direct_free
+                rd_parity = issue & is_ntx & ld & ~direct_free
+                ntx_w = issue & is_ntx & ~ld & ~is_h
+                w_pair = ntx_w & ~first_w
+                pm = rd_parity[:, None] & pvalid
+                kidx = jnp.concatenate(
+                    [key1[:, None], key2[:, None], key_other[:, None],
+                     pk_t, pk_r], axis=1)
+                kmsk = jnp.concatenate(
+                    [rd_direct[:, None],
+                     ((rd_direct & ~is_h) | w_pair)[:, None],
+                     w_pair[:, None], pm, pm & ~is_h[:, None]], axis=1)
+                use = use.at[arA[:, None], jnp.where(kmsk, kidx, U)].set(True)
+                wr_half = wr_half.at[arA, jnp.where(ntx_w, tree01, 2)].add(1)
+                pair_used = pair_used | w_pair
+                rm_rd = issue & is_remap & ld
+                rm_wr = issue & is_remap & ~ld
+                ridx = jnp.where(bsel, bankb,
+                                 jnp.where(rm_rd, mb,
+                                           jnp.where(rm_wr, wbank, NB)))
+                ruse = ruse.at[arA, ridx].add(1)
+                wuse = wuse.at[arA, jnp.where(rm_wr, wbank, NB)].set(1)
+                amap = amap.at[arA, jnp.where(rm_wr, a, D)].set(
+                    jnp.where(rm_wr, wbank, 0))
+                # apply issues to the global schedule state
+                latv = jnp.where(ld, mem_latency, lat[node])
+                tgt = jnp.where(issue, node, TRASH)
+                finish = finish.at[tgt].set(cycle + latv)
+                issued = issued.at[tgt].set(True)
+                first = defer & ~delayed[node]
+                delayed = delayed.at[jnp.where(first, node, TRASH)].set(True)
+                mem_pa = mem_pa + issue.astype(I32)
+                conflict_n = conflict_n + jnp.sum(
+                    first & (cause == STALL_BANK), dtype=I32)
+                parity_n = parity_n + jnp.sum(
+                    first & (cause == STALL_PARITY), dtype=I32)
+                pair_n = pair_n + jnp.sum(
+                    first & (cause == STALL_PAIR), dtype=I32)
+                pr_n = pr_n + jnp.sum(rd_parity, dtype=I32)
+                rmw_n = rmw_n + jnp.sum(w_pair, dtype=I32)
+                return (j + 1, rd, wr, slots, failed, saturated, stop,
+                        pair_used, wr_half, ruse, wuse, use, amap, finish,
+                        issued, delayed, mem_pa, conflict_n, parity_n,
+                        pair_n, pr_n, rmw_n)
+
+            zA = jnp.zeros((A,), I32)
+            z = jnp.int32(0)
+            st0 = (jnp.int32(0),
+                   desc[:, F_RD].astype(I32), desc[:, F_WR].astype(I32),
+                   desc[:, F_SLOTS].astype(I32), zA, zA,
+                   jnp.zeros((A,), bool), jnp.zeros((A,), bool),
+                   jnp.zeros((A, 3), I32),
+                   jnp.zeros((A, NB + 1), I32), jnp.zeros((A, NB + 1), I32),
+                   jnp.zeros((A, U + 1), bool), maps, finish, issued,
+                   delayed, zA, z, z, z, z, z)
+            st = lax.while_loop(icond, istep, st0)
+            maps, finish, issued, delayed = st[12:16]
+            mem_pa, conflict_add, parity_add, pair_add, pr_add, rmw_add = \
+                st[16:22]
+            mem_add = jnp.sum(mem_pa, dtype=I32)
+            per_array = per_array + mem_pa
+            any_mem = (mem_add > 0).astype(I32)
+
+            # ---- advance the clock (idle-cycle jump is cycle-exact)
+            issued_r = issued[:NPAD]
+            finish_r = finish[:NPAD]
+            still_ready = jnp.any(ready & ~issued_r)
+            inflight = issued_r & (finish_r > cycle)
+            any_inflight = jnp.any(inflight)
+            next_finish = jnp.min(jnp.where(inflight, finish_r, _INT32_INF))
+            ncycle = cycle + 1
+            ncycle = jnp.where(
+                ~still_ready & any_inflight & (next_finish > ncycle),
+                next_finish, ncycle)
+            err = jnp.where(
+                (err == ERR_NONE) & ~still_ready & ~any_inflight
+                & (remaining > 0),
+                jnp.int32(ERR_DEADLOCK), err)
+            cnt = cnt + jnp.stack(
+                [fu_issue_n + mem_add, mem_add, conflict_add, parity_add,
+                 pair_add, pr_add, rmw_add, any_mem])
+            return (ncycle, remaining, finish, issued, delayed, maps, cnt,
+                    per_array, err)
+
+        finish0 = jnp.concatenate([
+            jnp.full((NPAD,), _INT32_INF, I32),
+            jnp.asarray([-1, _INT32_INF], I32)])     # pred sentinel + trash
+        carry0 = (jnp.int32(0), n_real, finish0,
+                  jnp.zeros((NPAD + 2,), bool), jnp.zeros((NPAD + 2,), bool),
+                  jnp.zeros((A, D + 1), I32), jnp.zeros((8,), I32),
+                  jnp.zeros((A,), I32), jnp.int32(ERR_NONE))
+
+        def cond(c):
+            return (c[1] > 0) & (c[8] == ERR_NONE)
+
+        out = lax.while_loop(cond, body, carry0)
+        cycle, _, _, _, _, maps, cnt, per_array, err = out
+        return cycle, cnt, per_array, err, maps[:, :D]
+
+    return lane
+
+
+@lru_cache(maxsize=32)
+def _compiled(sc: StaticCfg):
+    lane = _make_lane_fn(sc)
+    return jax.jit(jax.vmap(lane, in_axes=(0,) * 8 + (None,) * 8))
+
+
+def _bucket_limits(limits: "Sequence[tuple]") -> tuple[int, int, int, int, int]:
+    """Pow-2 buckets of the per-design device limits (jit-cache reuse)."""
+    s, u, nb, d, pp = (max(col) for col in zip(*limits))
+    return (_next_pow2(max(s, 1)), _next_pow2(max(u, 1)),
+            _next_pow2(max(nb, 1)), _next_pow2(max(d, 1)),
+            _next_pow2(max(pp, 1)))
+
+
+def schedule_batched(
+    tr: "Trace | PreparedTrace",
+    cfgs: "Sequence[ScheduleConfig]",
+    *,
+    return_maps: bool = False,
+):
+    """Run the cycle-accurate scheduler for many designs in one jit call.
+
+    Every ``cfg`` is one design point over the *same* trace (the DSE
+    grid axis); the batch is vmapped, so cost grows with the widest
+    lane, not the lane count.  Returns ``list[ScheduleResult]`` in
+    ``cfgs`` order — each element exactly equal to what
+    ``scheduler.schedule`` computes for that config.  With
+    ``return_maps=True`` also returns the final remap live maps
+    ``[batch, n_arrays, table_depth]`` (property-test hook).
+    """
+    from repro.core.sim.scheduler import ScheduleResult
+
+    pt = prepare_trace(tr)
+    dv = pt.device_views()
+    cfgs = list(cfgs)
+    if not cfgs:
+        return ([], np.zeros((0, 0, 0), np.int32)) if return_maps else []
+
+    all_descs = [compile_descriptors(c.mem, pt.n_arrays, c.ports_per_bank)
+                 for c in cfgs]
+    S, U, NB, D, PP = _bucket_limits([device_limits(d) for d in all_descs])
+    A = dv.a_pad
+    sc = StaticCfg(
+        n_pad=dv.n_pad, n_preds_max=dv.n_preds_max, a_pad=A,
+        scan_slots=S, key_space=U, bank_slots=NB, table_depth=D,
+        parity_paths=PP)
+
+    B = len(cfgs)
+    desc = np.zeros((B, A, N_FIELDS), np.int32)
+    direct = np.zeros((B, A, D), np.int32)
+    offset = np.zeros((B, A, D), np.int32)
+    parity = np.zeros((B, A, D, PP), np.int32)
+    fu_budgets = np.zeros((B, len(FU_ORDER)), np.int32)
+    mem_latency = np.zeros((B,), np.int32)
+    ppb = np.zeros((B,), np.int32)
+    max_cycles = np.zeros((B,), np.int32)
+    for b, (cfg, descs) in enumerate(zip(cfgs, all_descs)):
+        mat = descriptor_matrix(descs)
+        desc[b, :mat.shape[0]] = mat.astype(np.int32)
+        dt, ot, pt_ = descriptor_device_tables(descs, A, D, PP)
+        direct[b], offset[b], parity[b] = dt, ot, pt_
+        fu_budgets[b] = [cfg.fu_counts.get(name, 1) for name in FU_ORDER]
+        mem_latency[b] = cfg.mem_latency
+        ppb[b] = cfg.ports_per_bank
+        max_cycles[b] = min(cfg.max_cycles, int(_INT32_INF) - 64)
+
+    cycles, cnt, per_array, err, maps = _compiled(sc)(
+        desc, fu_budgets, mem_latency, ppb, max_cycles,
+        direct, offset, parity,
+        np.int32(dv.n_real), dv.preds_pad, dv.lat, dv.is_load,
+        dv.word_idx, dv.perm, dv.gid_perm, dv.seg_start)
+    cycles = np.asarray(cycles)
+    cnt = np.asarray(cnt)
+    per_array = np.asarray(per_array)
+    err = np.asarray(err)
+
+    for b, cfg in enumerate(cfgs):
+        if err[b] == ERR_MAX_CYCLES:
+            raise RuntimeError(
+                f"scheduler exceeded {cfg.max_cycles} cycles")
+        if err[b] == ERR_DEADLOCK:
+            raise RuntimeError(
+                "deadlock: nodes remain but nothing ready/inflight")
+        if err[b] == ERR_UNCONFIGURED:
+            raise KeyError(
+                "memory op on array without a ScheduleConfig.mem spec")
+
+    names = pt.trace.array_names
+    results = [
+        ScheduleResult(
+            cycles=int(cycles[b]),
+            issued=int(cnt[b, 0]),
+            mem_issued=int(cnt[b, 1]),
+            bank_conflict_stalls=int(cnt[b, 2]),
+            parity_fanout_stalls=int(cnt[b, 3]),
+            write_pair_stalls=int(cnt[b, 4]),
+            parity_path_reads=int(cnt[b, 5]),
+            write_pair_rmws=int(cnt[b, 6]),
+            per_array_accesses={a: int(per_array[b, a]) for a in names},
+            avg_mem_parallelism=int(cnt[b, 1]) / max(int(cnt[b, 7]), 1),
+        )
+        for b in range(len(cfgs))
+    ]
+    if return_maps:
+        return results, np.asarray(maps)
+    return results
+
+
+def schedule_jax(tr: "Trace | PreparedTrace",
+                 cfg: "ScheduleConfig") -> "ScheduleResult":
+    """Single-design convenience wrapper over :func:`schedule_batched`."""
+    return schedule_batched(tr, [cfg])[0]

@@ -51,6 +51,10 @@ FU_ORDER: tuple[str, ...] = ("fadd", "fmul", "fdiv", "iadd", "imul",
                              "icmp", "logic")
 
 
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
 # ----------------------------------------------------------------------
 # vectorized DAG analyses (O(E) total work, swept frontier by frontier)
 # ----------------------------------------------------------------------
@@ -171,6 +175,125 @@ class PyMirrors:
     packed_prio: list[int]
 
 
+@dataclasses.dataclass(frozen=True)
+class DeviceViews:
+    """Fixed-shape, padded per-trace tensors for the batched JAX cycle
+    loop (``repro.core.sim.jax_cycle``).
+
+    Shapes are padded so that traces of similar size share one compiled
+    kernel: ``n_pad`` is the node count rounded up to a power of two and
+    ``n_preds_max`` the padded predecessor fan-in.  Padding is inert by
+    construction — pad nodes depend on themselves (``preds_pad[i] = i``)
+    so they are never ready, never issue, and never retire; real nodes
+    pad their missing predecessor slots with the sentinel index
+    ``n_pad``, whose finish time is pinned to ``-1`` (always retired).
+
+    ``perm`` lists every node grouped by resource class (array ids
+    first, then ``FU_ORDER`` classes, then the pad tail), each group
+    sorted by the list-scheduling priority ``(-height, node)`` — i.e.
+    exactly the order the reference loops pop their per-class heaps.
+    ``class_bounds[c]`` is the half-open ``perm`` range of class ``c``.
+    """
+
+    n_real: int
+    n_pad: int
+    n_preds_max: int
+    n_arrays: int
+    a_pad: int                 # array-axis bucket (>= max(n_arrays, 1))
+    preds_pad: np.ndarray      # [n_pad, n_preds_max] int32 (pad = n_pad)
+    lat: np.ndarray            # [n_pad] int32 FU/store latency per node
+    is_load: np.ndarray        # [n_pad] bool
+    word_idx: np.ndarray       # [n_pad] int32 (0 for compute/pad nodes)
+    perm: np.ndarray           # [n_pad] int32 class-grouped priority order
+    gid_perm: np.ndarray       # [n_pad] int32 class id per perm slot:
+                               #   array id, a_pad + FU index, a_pad + 7 pads
+    seg_start: np.ndarray      # [a_pad + 8] int32 segment starts (+ total)
+    class_bounds: tuple        # ((lo, hi), ...) per real class id
+
+    @property
+    def signature(self) -> tuple:
+        """Static shape key: traces sharing it share one compiled kernel.
+
+        Only padded dimensions enter the key — the class segment layout
+        travels as device data (``gid_perm``/``seg_start``), so traces
+        of similar size reuse one compiled kernel regardless of their
+        class structure.
+        """
+        return (self.n_pad, self.n_preds_max, self.a_pad)
+
+
+def _build_device_views(pt: "PreparedTrace") -> DeviceViews:
+    n = pt.trace.n_nodes
+    n_pad = _next_pow2(max(n, 16))
+    n_classes = pt.n_arrays + len(FU_ORDER)
+    a_pad = _next_pow2(max(pt.n_arrays, 1))
+
+    indeg = pt.indegree
+    p_max = _next_pow2(max(int(indeg.max()) if n else 0, 1))
+    preds_pad = np.full((n_pad, p_max), n_pad, np.int32)
+    if n:
+        ptr = pt.trace.pred_ptr
+        idx = pt.trace.pred_idx
+        lens = (ptr[1:] - ptr[:-1]).astype(np.int64)
+        rows = np.repeat(np.arange(n, dtype=np.int64), lens)
+        cols = np.arange(idx.shape[0], dtype=np.int64) - np.repeat(
+            ptr[:-1], lens)
+        preds_pad[rows, cols] = idx.astype(np.int32)
+    # pad nodes gate on themselves: never ready, never issued
+    pad_ids = np.arange(n, n_pad, dtype=np.int32)
+    preds_pad[n:] = pad_ids[:, None]
+
+    # class-grouped, priority-sorted permutation.  np.lexsort is stable
+    # and sorts by the LAST key first: (class, -height, node).
+    klass = np.concatenate([pt.klass_np.astype(np.int64),
+                            np.full(n_pad - n, n_classes, np.int64)])
+    height = np.concatenate([pt.height.astype(np.int64),
+                             np.zeros(n_pad - n, np.int64)])
+    node = np.arange(n_pad, dtype=np.int64)
+    perm = np.lexsort((node, -height, klass)).astype(np.int32)
+
+    counts = np.bincount(klass[perm], minlength=n_classes + 1)
+    ends = np.cumsum(counts)
+    bounds = tuple((int(ends[c] - counts[c]), int(ends[c]))
+                   for c in range(n_classes))
+
+    # a_pad-relative class ids per perm slot + segment starts, as device
+    # data: arrays [0, n_arrays), empty pad arrays [n_arrays, a_pad), FU
+    # classes [a_pad, a_pad + 7), trace pads a_pad + 7
+    gid_perm = np.full(n_pad, a_pad + len(FU_ORDER), np.int32)
+    seg_start = np.zeros(a_pad + len(FU_ORDER) + 1, np.int32)
+    pos = 0
+    for g in range(a_pad + len(FU_ORDER)):
+        c = g if g < pt.n_arrays else (
+            pt.n_arrays + (g - a_pad) if g >= a_pad else -1)
+        if 0 <= c < n_classes:
+            lo, hi = bounds[c]
+            gid_perm[lo:hi] = g
+            seg_start[g] = lo
+            pos = hi
+        else:
+            seg_start[g] = pos          # empty pad-array segment
+    seg_start[-1] = pos
+
+    lat = np.zeros(n_pad, np.int32)
+    lat[:n] = pt.latency_np
+    is_load = np.zeros(n_pad, bool)
+    is_load[:n] = pt.is_load_np.astype(bool)
+    word_idx = np.zeros(n_pad, np.int32)
+    if n:
+        wi = pt.word_index_np
+        if wi.size and int(wi.max()) >= 2**31:
+            raise ValueError("word indices exceed int32: jax backend "
+                             "unsupported for this trace")
+        word_idx[:n] = np.maximum(wi, 0).astype(np.int32)
+
+    return DeviceViews(
+        n_real=n, n_pad=n_pad, n_preds_max=p_max, n_arrays=pt.n_arrays,
+        a_pad=a_pad, preds_pad=preds_pad, lat=lat, is_load=is_load,
+        word_idx=word_idx, perm=perm, gid_perm=gid_perm,
+        seg_start=seg_start, class_bounds=bounds)
+
+
 @dataclasses.dataclass
 class PreparedTrace:
     """One-time trace analysis shared by every design-point evaluation.
@@ -199,6 +322,8 @@ class PreparedTrace:
     klass_np: np.ndarray       # [N] int64
     _mirrors: "PyMirrors | None" = dataclasses.field(
         default=None, repr=False, compare=False)
+    _device: "DeviceViews | None" = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def name(self) -> str:
@@ -225,6 +350,13 @@ class PreparedTrace:
                              + np.arange(n)).tolist(),
             )
         return self._mirrors
+
+    def device_views(self) -> DeviceViews:
+        """Build (once) the padded fixed-shape tensors for the batched
+        JAX cycle loop — see :class:`DeviceViews`."""
+        if self._device is None:
+            self._device = _build_device_views(self)
+        return self._device
 
 
 def _array_depths(tr: T.Trace, word_idx: np.ndarray) -> dict[int, int]:

@@ -89,18 +89,43 @@ class ScheduleResult:
         return dataclasses.asdict(self)
 
 
-def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig) -> ScheduleResult:
+def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig,
+             backend: str = "auto") -> ScheduleResult:
     """Run the port-constrained list scheduler on one trace.
 
-    Dispatches to the compiled cycle loop when available (see
-    ``repro.core.sim._cycle_ext``); the pure-Python loop below is the
-    reference implementation and the fallback.  Both are cycle-exact
-    twins — golden regression tests pin their outputs against the seed
-    scheduler for ``ideal``/``banked`` and against each other for every
-    AMM kind (``tests/test_arbiter.py``).
+    Three cycle-exact execution backends implement the same decision
+    procedure (pinned against each other by ``tests/test_arbiter.py``,
+    ``tests/test_golden_schedule.py`` and the differential fuzz suite in
+    ``tests/test_conformance.py``):
+
+    * ``"auto"`` — the compiled C loop when a compiler is available
+      (``repro.core.sim._cycle_ext``), else the Python loop;
+    * ``"c"`` — the compiled loop, *required*: raises ``RuntimeError``
+      when the extension cannot be built, so C-labeled timings are
+      never silently Python timings.  (Designs beyond the fixed
+      ``_MAX_C_PARITY_PATHS`` path buffers still fall back to the
+      identical-result Python loop — that limit is structural, not
+      environmental.);
+    * ``"py"`` — the pure-Python reference loop below;
+    * ``"jax"`` — the batched fixed-shape loop in
+      ``repro.core.sim.jax_cycle`` (one design per call here; use
+      ``jax_cycle.schedule_batched`` to evaluate a whole grid per jit
+      call).
     """
     pt = prepare_trace(tr)
+    if backend == "jax":
+        from repro.core.sim.jax_cycle import schedule_jax
+        return schedule_jax(pt, cfg)
+    if backend == "py":
+        return _schedule_py(pt, cfg)
+    if backend not in ("auto", "c"):
+        raise ValueError(f"unknown scheduler backend {backend!r}")
     fast = _cycle_ext.load()
+    if fast is None and backend == "c":
+        raise RuntimeError(
+            "backend='c' requested but the compiled cycle loop is "
+            "unavailable (no C compiler / REPRO_PURE_PY set); use "
+            "backend='auto' for silent pure-Python fallback")
     if fast is not None:
         res = _schedule_c(fast, pt, cfg)
         if res is not None:

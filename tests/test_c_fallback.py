@@ -1,0 +1,90 @@
+"""Edge tests for the ``_MAX_C_PARITY_PATHS`` C-fallback guard (ISSUE 5).
+
+The compiled cycle loop keeps fixed-size per-read parity-path buffers
+(``_MAX_C_PARITY_PATHS`` leaf paths).  An NTX read tree with ``k``
+levels fans a parity read out over ``2**k`` paths, so a port config
+with ``2**k > _MAX_C_PARITY_PATHS`` cannot be arbitrated by the C loop:
+``schedule()`` must fall back to the pure-Python reference loop with
+identical results — never truncate the path set silently.
+"""
+import pytest
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.sim import _cycle_ext, prepare_trace
+from repro.core.sim.scheduler import (_MAX_C_PARITY_PATHS, ScheduleConfig,
+                                      _schedule_c, _schedule_py, schedule)
+from repro.core.sim.trace import TraceBuilder
+
+
+def _trace(n_ops: int = 24, depth: int = 1024):
+    tb = TraceBuilder("deep_tree")
+    a = tb.declare_array("a", 4)
+    prev = ()
+    for i in range(n_ops):
+        # same-leaf pressure: consecutive reads collide on direct leaves
+        # so the parity-path machinery is actually exercised
+        nid = (tb.load(a, (i * 3) % 8) if i % 4 else
+               tb.store(a, (i * 5) % depth, prev))
+        prev = (nid,)
+    return prepare_trace(tb.build())
+
+
+def _cfg(spec: AMMSpec) -> ScheduleConfig:
+    return ScheduleConfig(mem={0: spec}, fu_counts={})
+
+
+def test_overflowing_parity_paths_rejects_c_loop():
+    fast = _cycle_ext.load()
+    if fast is None:
+        pytest.skip("no C compiler available")
+    # 256 read ports -> k = 8 -> 2**8 = 256 parity paths > 128 buffer
+    spec = AMMSpec("h_ntx_rd", 256, 1, 1024)
+    assert (1 << spec.read_tree_levels) > _MAX_C_PARITY_PATHS
+    assert _schedule_c(fast, _trace(), _cfg(spec)) is None
+
+
+def test_overflow_falls_back_to_python_with_identical_results():
+    spec = AMMSpec("h_ntx_rd", 256, 1, 1024)
+    pt = _trace()
+    res = schedule(pt, _cfg(spec))          # public path: must not raise
+    assert res == _schedule_py(pt, _cfg(spec))
+    assert res.cycles > 0 and res.mem_issued == pt.trace.n_mem
+
+
+def test_hb_ntx_overflow_also_falls_back():
+    spec = AMMSpec("hb_ntx", 256, 2, 1024)
+    pt = _trace()
+    fast = _cycle_ext.load()
+    if fast is not None:
+        assert _schedule_c(fast, pt, _cfg(spec)) is None
+    assert schedule(pt, _cfg(spec)) == _schedule_py(pt, _cfg(spec))
+
+
+def test_explicit_c_backend_never_silently_degrades(monkeypatch):
+    """backend='c' must raise when the extension is unavailable instead
+    of silently timing the Python loop under a C label; 'auto' keeps
+    the silent fallback."""
+    import repro.core.sim._cycle_ext as ext
+
+    monkeypatch.setattr(ext, "_FN", None)
+    monkeypatch.setattr(ext, "_TRIED", True)
+    pt = _trace()
+    spec = AMMSpec("ideal", 2, 2, 64)
+    with pytest.raises(RuntimeError, match="backend='c'"):
+        schedule(pt, _cfg(spec), backend="c")
+    assert schedule(pt, _cfg(spec), backend="auto") \
+        == _schedule_py(pt, _cfg(spec))
+
+
+def test_boundary_tree_depth_still_uses_c_loop():
+    """k = 7 -> exactly _MAX_C_PARITY_PATHS paths: the C loop must keep
+    handling it (the guard is strictly 'greater than')."""
+    fast = _cycle_ext.load()
+    if fast is None:
+        pytest.skip("no C compiler available")
+    spec = AMMSpec("h_ntx_rd", 128, 1, 1024)
+    assert (1 << spec.read_tree_levels) == _MAX_C_PARITY_PATHS
+    pt = _trace()
+    res = _schedule_c(fast, pt, _cfg(spec))
+    assert res is not None                  # no spurious fallback
+    assert res == _schedule_py(pt, _cfg(spec))

@@ -1,0 +1,212 @@
+"""Three-way differential conformance fuzz (ISSUE 5 satellite).
+
+The scheduler has three cycle-loop backends — pure-Python reference,
+compiled C, batched JAX — that must agree *decision for decision*: same
+cycle counts, same stall breakdown, same parity/RMW event counters,
+same per-array access totals.  Hand-pinned goldens only cover the
+benchmark traces; this suite drives all three loops with
+hypothesis-generated DDGs (random dependency structure, every design
+kind including leaf sub-banking, mixed FU budgets / memory latencies /
+ports-per-bank) and asserts full ``ScheduleResult`` equality.
+
+On failure the shrunk counterexample is serialized to
+``tests/conformance_failures/repro_<test>.json`` (trace ops, per-array
+specs, config) so it can be replayed without hypothesis:
+
+    python - <<'PY'
+    from tests.test_conformance import replay_repro
+    replay_repro("tests/conformance_failures/repro_<test>.json")
+    PY
+
+Two op-less "shape anchor" arrays ride along in every config to pin the
+design-derived padding buckets (NTX key space, remap banks, table
+depth, parity fan-out) to their maxima, so jit signatures do not vary
+with the drawn design mix.  Trace-derived buckets (node-count pow2,
+pred fan-in) and the ports-per-bank-dependent scan-slot bucket still
+vary, so the suite compiles a small handful of kernels rather than
+exactly one.
+"""
+import json
+import pathlib
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.sim import _cycle_ext
+from repro.core.sim.scheduler import (ScheduleConfig, _schedule_c,
+                                      _schedule_py)
+from repro.core.sim.trace import (FADD, FDIV, FMUL, IADD, ICMP, IMUL, LOGIC,
+                                  TraceBuilder)
+
+FAIL_DIR = pathlib.Path(__file__).parent / "conformance_failures"
+
+_FU_KINDS = (FADD, FMUL, FDIV, IADD, IMUL, ICMP, LOGIC)
+_DEPTH = 64          # pow2: satisfies every kind's divisibility rule
+
+# (kind, n_read, n_write, sub) legal design templates; sub > 1 only
+# where the leaf depth allows it at _DEPTH
+_DESIGN_SPACE = (
+    ("ideal", 2, 2, 1),
+    ("ideal", 4, 1, 1),
+    ("banked", 2, 2, 1), ("banked", 4, 4, 2), ("banked", 8, 8, 4),
+    ("multipump", 2, 2, 1), ("multipump", 4, 4, 1),
+    ("h_ntx_rd", 2, 1, 1), ("h_ntx_rd", 4, 1, 1), ("h_ntx_rd", 4, 1, 2),
+    ("b_ntx_wr", 1, 2, 1), ("b_ntx_wr", 2, 2, 2),
+    ("hb_ntx", 2, 2, 1), ("hb_ntx", 4, 2, 1), ("hb_ntx", 4, 2, 2),
+    ("lvt", 2, 2, 1), ("lvt", 4, 2, 1),
+    ("remap", 2, 2, 1), ("remap", 4, 3, 1),
+)
+
+# op-less arrays appended to every trace: their specs max out the
+# device-padding buckets (scan slots, NTX key space, remap banks, table
+# depth, parity fan-out) so all fuzz cases share one compiled kernel
+_ANCHOR_SPECS = (
+    AMMSpec("hb_ntx", 4, 2, _DEPTH, n_banks=2),
+    AMMSpec("remap", 4, 3, _DEPTH),
+)
+
+
+def gen_case(draw):
+    """Draw one (trace-recipe, config-recipe) case as a plain dict."""
+    n_arrays = draw(st.integers(1, 2))
+    n_ops = draw(st.integers(6, 48))
+    ops = []
+    for i in range(n_ops):
+        is_mem = draw(st.booleans())
+        n_deps = draw(st.integers(0, min(2, i)))
+        deps = sorted({draw(st.integers(0, i - 1)) for _ in range(n_deps)})
+        if is_mem:
+            ops.append({
+                "mem": True,
+                "load": draw(st.booleans()),
+                "array": draw(st.integers(0, n_arrays - 1)),
+                "index": draw(st.integers(0, _DEPTH - 1)),
+                "deps": deps,
+            })
+        else:
+            ops.append({
+                "mem": False,
+                "fu": draw(st.integers(0, len(_FU_KINDS) - 1)),
+                "deps": deps,
+            })
+    designs = [draw(st.integers(0, len(_DESIGN_SPACE) - 1))
+               for _ in range(n_arrays)]
+    fu_counts = {name: draw(st.integers(1, 6))
+                 for name in ("fadd", "fmul", "fdiv", "iadd", "imul",
+                              "icmp", "logic")}
+    return {
+        "n_arrays": n_arrays,
+        "ops": ops,
+        "designs": designs,
+        "fu_counts": fu_counts,
+        "mem_latency": draw(st.integers(1, 3)),
+        "ports_per_bank": draw(st.integers(1, 2)),
+    }
+
+
+def build_case(case):
+    """Materialize a drawn case into ``(Trace, ScheduleConfig)``."""
+    tb = TraceBuilder("fuzz")
+    for aid in range(case["n_arrays"]):
+        tb.declare_array(f"a{aid}", 4)
+    anchor_base = case["n_arrays"]
+    for k in range(len(_ANCHOR_SPECS)):
+        tb.declare_array(f"anchor{k}", 4)
+    for op in case["ops"]:
+        deps = tuple(op["deps"])
+        if op["mem"]:
+            if op["load"]:
+                tb.load(op["array"], op["index"], deps)
+            else:
+                tb.store(op["array"], op["index"], deps)
+        else:
+            tb.op(_FU_KINDS[op["fu"]], *deps)
+    tr = tb.build()
+    mem = {}
+    for aid, di in enumerate(case["designs"]):
+        kind, rd, wr, sub = _DESIGN_SPACE[di]
+        nb = sub if kind == "banked" else 1
+        if kind in ("h_ntx_rd", "b_ntx_wr", "hb_ntx", "lvt", "remap"):
+            nb = sub
+        mem[aid] = AMMSpec(kind, rd, wr, _DEPTH, n_banks=nb)
+    for k, spec in enumerate(_ANCHOR_SPECS):
+        mem[anchor_base + k] = spec
+    cfg = ScheduleConfig(
+        mem=mem, fu_counts=dict(case["fu_counts"]),
+        mem_latency=case["mem_latency"],
+        ports_per_bank=case["ports_per_bank"])
+    return tr, cfg
+
+
+def replay_repro(path):
+    """Re-run a serialized counterexample through all three backends."""
+    case = json.loads(pathlib.Path(path).read_text())
+    _assert_conformance(case, repro_name=None)
+
+
+def _dump_repro(case, name: str) -> pathlib.Path:
+    FAIL_DIR.mkdir(exist_ok=True)
+    path = FAIL_DIR / f"repro_{name}.json"
+    path.write_text(json.dumps(case, indent=1, sort_keys=True))
+    return path
+
+
+def _assert_conformance(case, repro_name: "str | None"):
+    from repro.core.sim.jax_cycle import schedule_jax
+    from repro.core.sim.prepared import prepare_trace
+
+    tr, cfg = build_case(case)
+    tr = prepare_trace(tr)
+    try:
+        py = _schedule_py(tr, cfg)
+        jx = schedule_jax(tr, cfg)
+        assert jx == py, f"jax vs python loop:\n  jax: {jx}\n  py : {py}"
+        fast = _cycle_ext.load()
+        if fast is not None:
+            cc = _schedule_c(fast, tr, cfg)
+            assert cc == py, f"C vs python loop:\n  C : {cc}\n  py: {py}"
+    except AssertionError as e:
+        if repro_name is not None:
+            path = _dump_repro(case, repro_name)
+            raise AssertionError(
+                f"{e}\n(counterexample serialized to {path}; replay with "
+                f"tests.test_conformance.replay_repro)") from None
+        raise
+
+
+@settings(max_examples=120, deadline=None)
+@given(st.data())
+def test_three_backends_agree_on_random_ddgs(data):
+    """py / C / jax loops agree on cycles + stall breakdown + event
+    counters for arbitrary small DDGs over the full design space."""
+    _assert_conformance(gen_case(data.draw), "random_ddgs")
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.data())
+def test_three_backends_agree_on_mem_storms(data):
+    """Memory-only bursts (every op a load/store, dense same-array
+    traffic) maximize arbitration pressure: parity fan-out, write
+    pairing, steering conflicts, deferral-scan caps."""
+    case = gen_case(data.draw)
+    for i, op in enumerate(case["ops"]):
+        if not op["mem"]:
+            case["ops"][i] = {"mem": True, "load": i % 3 != 0,
+                              "array": i % case["n_arrays"],
+                              "index": (7 * i) % _DEPTH,
+                              "deps": op["deps"]}
+    _assert_conformance(case, "mem_storms")
+
+
+def test_repro_files_replay_clean():
+    """Any committed counterexample repro must now pass (regression
+    lock: a fixed divergence stays fixed)."""
+    if not FAIL_DIR.exists():
+        pytest.skip("no serialized counterexamples")
+    files = sorted(FAIL_DIR.glob("repro_*.json"))
+    if not files:
+        pytest.skip("no serialized counterexamples")
+    for f in files:
+        replay_repro(f)

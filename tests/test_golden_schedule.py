@@ -1,13 +1,22 @@
-"""Golden cycle-count regression: the vectorized/prepared scheduler must
-be cycle-exact against the seed implementation.
+"""Golden cycle-count regression: every scheduler backend must be
+cycle-exact against the pinned golden matrix.
 
-``golden_schedule.json`` was captured from the seed (pre-PreparedTrace)
-scheduler over a (bench, design, unroll) matrix.  Both the compiled C
-cycle loop and the pure-Python reference loop must reproduce every
-cycles / issued / mem_issued / avg_mem_parallelism value bit-exactly.
-(``bank_conflict_stalls`` is deliberately NOT pinned: the seed
-double-counted multiply-deferred accesses; it now counts unique delayed
-accesses.)
+``golden_schedule.json`` holds two generations of rows.  The original
+rows were captured from the seed (pre-PreparedTrace) scheduler over a
+(bench, design, unroll) matrix; both the compiled C cycle loop and the
+pure-Python reference loop must reproduce every cycles / issued /
+mem_issued / avg_mem_parallelism value bit-exactly.  Rows added later
+(the ``-b4`` leaf-sub-banked DEFAULT_DESIGNS points, the per-kind
+coverage across all 12 benches — see ``tools/gen_golden_schedule.py``)
+were captured from the agreeing C + pure-py loops and additionally pin
+the full stall breakdown (``bank_conflict`` / ``parity_fanout`` /
+``write_pair``) plus the parity-path-read and write-pair-RMW event
+counters.
+
+The batched JAX backend (``repro.core.sim.jax_cycle``) is pinned
+against the same matrix: one ``schedule_batched`` call per bench
+evaluates every golden design row of that bench in a single jit call
+and must match each row — including the stall breakdown — exactly.
 """
 import json
 import pathlib
@@ -28,7 +37,20 @@ _DESIGNS = {
     "multipump-2R2W": DesignPoint("multipump", 2, 2, 1),
     "hb_ntx-2R2W": DesignPoint("hb_ntx", 2, 2, 1),
     "lvt-4R2W": DesignPoint("lvt", 4, 2, 1),
+    # post-seed coverage: remaining kinds + the -b4 sub-banked points
+    "ideal-2R2W": DesignPoint("ideal", 2, 2, 1),
+    "h_ntx_rd-4R1W": DesignPoint("h_ntx_rd", 4, 1, 1),
+    "b_ntx_wr-1R2W": DesignPoint("b_ntx_wr", 1, 2, 1),
+    "remap-2R2W": DesignPoint("remap", 2, 2, 1),
+    "h_ntx_rd-4R1W-b4": DesignPoint("h_ntx_rd", 4, 1, n_banks=4),
+    "hb_ntx-4R2W-b4": DesignPoint("hb_ntx", 4, 2, n_banks=4),
+    "lvt-4R2W-b4": DesignPoint("lvt", 4, 2, n_banks=4),
+    "remap-4R2W-b4": DesignPoint("remap", 4, 2, n_banks=4),
 }
+
+_STALL_FIELDS = ("bank_conflict_stalls", "parity_fanout_stalls",
+                 "write_pair_stalls", "parity_path_reads",
+                 "write_pair_rmws")
 
 
 def _config(pt, design: str, unroll: int) -> ScheduleConfig:
@@ -46,6 +68,9 @@ def _check(res, g):
     assert res.issued == g["issued"]
     assert res.mem_issued == g["mem_issued"]
     assert abs(res.avg_mem_parallelism - g["avg_mem_parallelism"]) < 1e-9
+    for f in _STALL_FIELDS:
+        if f in g:
+            assert getattr(res, f) == g[f], (f, g, getattr(res, f))
 
 
 @pytest.mark.parametrize(
@@ -77,3 +102,28 @@ def test_c_and_python_loops_agree_everywhere():
         pt = prepare_trace(get_trace(g["bench"]))
         cfg = _config(pt, g["design"], g["unroll"])
         assert schedule(pt, cfg) == _schedule_py(pt, cfg)
+
+
+def _bench_rows():
+    by_bench: dict[str, list] = {}
+    for g in GOLDEN:
+        by_bench.setdefault(g["bench"], []).append(g)
+    return sorted(by_bench.items())
+
+
+_BENCH_ROWS = _bench_rows()
+
+
+@pytest.mark.parametrize("bench,rows", _BENCH_ROWS,
+                         ids=[b for b, _ in _BENCH_ROWS])
+def test_jax_grid_matches_golden(bench, rows):
+    """One batched jit call per bench evaluates every golden design row
+    and must match each — cycles AND stall breakdown (ISSUE 5
+    acceptance: all benches x all kinds)."""
+    from repro.core.sim.jax_cycle import schedule_batched
+
+    pt = prepare_trace(get_trace(bench))
+    cfgs = [_config(pt, g["design"], g["unroll"]) for g in rows]
+    results = schedule_batched(pt, cfgs)
+    for g, res in zip(rows, results):
+        _check(res, g)
