@@ -7,6 +7,8 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   kernel_microbench — Pallas kernels (interpret mode; TPU is the target)
   scheduler_microbench — C cycle loop vs pure-Python fallback (large trace)
   scheduler_batched — batched JAX grid vs per-point C / python loops
+  dse_matrix        — full 12x13 DSE matrix: exhaustive C vs
+                      surrogate-pruned batched-C vs warm cache
   lm_smoke_bench    — tiny-arch train/decode step wall times (CPU)
 
 Full-size runs: ``python -m benchmarks.run --full`` (minutes).
@@ -370,6 +372,79 @@ def scheduler_batched() -> None:
          f"py_loop_us={py_us:.0f};jax_vs_py={py_us / jax_sub_us:.1f}x")
 
 
+def dse_matrix() -> None:
+    """Full 12-bench x 13-design x 4-unroll DSE matrix three ways:
+    exhaustive per-point C sweep, surrogate-pruned batched-C sweep
+    (band prune + in-C Pareto front caps) and the fully-warm on-disk
+    cache (manifest fast path, trace generation skipped).  The unroll
+    axis is the default sweep grid (1/2/4/8), the design axis the
+    13-design calibration matrix.
+
+    Traces are generated and prepared in a prepass so the timed legs
+    measure sweep compute only; the surrogate leg *does* pay for its
+    own feature extraction (it is part of the pruned-sweep cost).
+    Derived fields pin the headline claims: pruned-vs-exhaustive
+    speedup and Pareto-front identity on every bench.
+    """
+    import tempfile
+
+    from repro.core.bench import BENCHMARKS, get_trace, trace_cache_key
+    from repro.core.dse.pareto import pareto_front
+    from repro.core.dse.runner import (SweepCache, point_key, run_sweep,
+                                       run_sweep_bench)
+    from repro.core.dse.surrogate import CALIBRATION_DESIGNS
+    from repro.core.dse.sweep import DEFAULT_UNROLLS, evaluate_point
+    from repro.core.sim import prepare_trace
+
+    designs = list(CALIBRATION_DESIGNS.values())
+    unrolls = DEFAULT_UNROLLS
+    grid = [(dp, u) for dp in designs for u in unrolls]
+    names = sorted(BENCHMARKS)
+    prepared = {n: prepare_trace(get_trace(n, full=FULL)) for n in names}
+    n_pts = len(names) * len(grid)
+
+    # leg 1: exhaustive — every grid point through the per-point C loop
+    t0 = time.perf_counter()
+    full_res = {n: [evaluate_point(prepared[n], dp, u) for dp, u in grid]
+                for n in names}
+    t_exh = time.perf_counter() - t0
+
+    # leg 2: surrogate-pruned (analytic ranking + batched C + front caps)
+    t0 = time.perf_counter()
+    pruned_res = {n: run_sweep(prepared[n], designs, unrolls,
+                               prune="surrogate") for n in names}
+    t_prn = time.perf_counter() - t0
+
+    fronts_ok = 0
+    n_kept = 0
+    for n in names:
+        n_kept += len(pruned_res[n])
+        ff = {(p.design, p.unroll) for p in pareto_front(full_res[n])}
+        fp = {(p.design, p.unroll) for p in pareto_front(pruned_res[n])}
+        fronts_ok += ff == fp
+
+    # leg 3: warm cache — manifest fast path, trace generation skipped
+    with tempfile.TemporaryDirectory() as d:
+        cache = SweepCache(d)
+        for n in names:
+            fp_ = prepared[n].fingerprint
+            for (dp, u), p in zip(grid, full_res[n]):
+                cache.put(point_key(fp_, dp, u, 2), p)
+            cache.manifest_put(trace_cache_key(n, full=FULL), fp_)
+        t0 = time.perf_counter()
+        for n in names:
+            run_sweep_bench(n, designs, unrolls, full=FULL, cache=cache)
+        t_warm = time.perf_counter() - t0
+
+    _row("dse_matrix.exhaustive_c", t_exh * 1e6,
+         f"benches={len(names)};points={n_pts}")
+    _row("dse_matrix.surrogate_pruned", t_prn * 1e6,
+         f"kept={n_kept}/{n_pts};speedup={t_exh / t_prn:.2f}x;"
+         f"fronts_identical={fronts_ok}/{len(names)}")
+    _row("dse_matrix.warm_cache", t_warm * 1e6,
+         f"points={n_pts};speedup={t_exh / t_warm:.1f}x")
+
+
 def lm_smoke_bench() -> None:
     """Tiny-config train/decode step wall time per assigned arch."""
     import jax
@@ -448,6 +523,7 @@ TABLES = {
     "amm_replay": amm_replay,
     "scheduler_microbench": scheduler_microbench,
     "scheduler_batched": scheduler_batched,
+    "dse_matrix": dse_matrix,
     "lm_smoke_bench": lm_smoke_bench,
     "grad_sync_bench": grad_sync_bench,
 }

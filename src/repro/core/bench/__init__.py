@@ -127,6 +127,23 @@ def _trace_to_disk(path: str, tr) -> None:
         pass
 
 
+def trace_cache_key(name: str, params=None, *, full: bool = False) -> str:
+    """Stable identity of ``get_trace(name, params, full=full)`` WITHOUT
+    generating the trace.
+
+    Trace generation is pure in (module source, params), so this key
+    changes exactly when the generated trace would.  The DSE sweep cache
+    maps it to the trace *fingerprint* (``manifest.json``), letting a
+    fully-cached sweep skip trace generation and preparation entirely.
+    """
+    mod = BENCHMARKS[name]
+    if params is None:
+        params = mod.Params() if full else mod.TINY
+    return hashlib.sha256(
+        repr((_TRACE_CACHE_VERSION, _module_src_hash(mod), name,
+              dataclasses.astuple(params))).encode()).hexdigest()[:24]
+
+
 def get_trace(name: str, params=None, *, full: bool = False):
     """Memoized ``BENCHMARKS[name].gen_trace(params)``.
 
@@ -153,4 +170,4 @@ def get_trace(name: str, params=None, *, full: bool = False):
     return _TRACE_MEMO[key]
 
 
-__all__ = ["BENCHMARKS", "PAPER_FIG4", "get_trace"]
+__all__ = ["BENCHMARKS", "PAPER_FIG4", "get_trace", "trace_cache_key"]

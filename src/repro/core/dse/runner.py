@@ -12,7 +12,16 @@ compositions.  This module is the execution engine for that loop:
 * **Incremental re-sweeps** — an on-disk result cache keyed by
   ``(trace fingerprint, design, unroll, mem_latency, cache version)``
   makes re-runs and ``--full`` extensions of a previous sweep pay only
-  for the new points.
+  for the new points.  A ``manifest.json`` alongside the cache maps
+  benchmark identities to trace fingerprints so a *fully* cached sweep
+  (:func:`run_sweep_bench`) skips trace generation and preparation
+  entirely.
+* **Surrogate pruning** — ``prune="surrogate"`` ranks the full grid
+  with the analytic cycle predictor (:mod:`repro.core.dse.surrogate`),
+  exact-simulates only the predicted Pareto band (plus a safety
+  margin) in one batched C call with in-C front caps, and returns the
+  retained points — a strict superset of the exact Pareto front at a
+  fraction of the exhaustive cost.
 
 Results are deterministic: the returned list is always ordered
 ``designs``-major / ``unrolls``-minor and each point is bitwise
@@ -121,6 +130,41 @@ class SweepCache:
             json.dump(dataclasses.asdict(point), f)
         os.replace(tmp, p)
 
+    # -- bench-identity -> trace-fingerprint manifest ------------------
+    # Point keys need the trace *fingerprint*, which normally requires
+    # generating + preparing the trace.  The manifest remembers the
+    # mapping from a generation-free bench identity
+    # (repro.core.bench.trace_cache_key) to the fingerprint, so a sweep
+    # whose points are all cached never touches the trace at all.
+    def _manifest_path(self) -> "Path":
+        return self.root / "manifest.json"
+
+    def _manifest_read(self) -> dict:
+        import json
+
+        try:
+            with open(self._manifest_path()) as f:
+                d = json.load(f)
+            return d if isinstance(d, dict) else {}
+        except (OSError, ValueError):
+            return {}
+
+    def manifest_get(self, bench_key: str) -> "str | None":
+        return self._manifest_read().get(bench_key)
+
+    def manifest_put(self, bench_key: str, fingerprint: str) -> None:
+        import json
+
+        d = self._manifest_read()
+        if d.get(bench_key) == fingerprint:
+            return
+        d[bench_key] = fingerprint
+        p = self._manifest_path()
+        tmp = p.with_suffix(f".tmp.{os.getpid()}")
+        with open(tmp, "w") as f:
+            json.dump(d, f, indent=0, sort_keys=True)
+        os.replace(tmp, p)
+
 
 def _resolve_cache(cache_dir: "str | Path | None") -> "SweepCache | None":
     if cache_dir is None:
@@ -214,6 +258,81 @@ def _chunked(tasks: list, n_chunks: int) -> list[list]:
 # ----------------------------------------------------------------------
 # entry point
 # ----------------------------------------------------------------------
+def _vlog(verbose: bool, msg: str) -> None:
+    if verbose:
+        import sys
+
+        print(f"[sweep] {msg}", file=sys.stderr, flush=True)
+
+
+def _run_pruned(
+    pt: PreparedTrace,
+    designs: Sequence[DesignPoint],
+    unrolls: "tuple[int, ...]",
+    mem_latency: int,
+    cache: "SweepCache | None",
+    margin: "float | None",
+    verbose: bool,
+) -> list[DSEPoint]:
+    """Surrogate-pruned sweep: rank the grid analytically, exact-simulate
+    only the predicted Pareto band in one batched, front-capped C call.
+
+    Returns the retained completed points (a designs-major subsequence
+    of the full grid).  Guarantee: the returned set contains every
+    member of the exact Pareto front — the surrogate band keeps all
+    near-front candidates (``margin`` is the safety slack on predicted
+    time) and the in-C cap only abandons points *proven* off-front
+    against exact cheaper results.
+    """
+    from repro.core.dse.surrogate import (DEFAULT_MARGIN, grid_predictions,
+                                          select_band)
+    from repro.core.dse.sweep import evaluate_points
+
+    if margin is None:
+        margin = DEFAULT_MARGIN
+    t0 = time.perf_counter()
+    preds = grid_predictions(pt, designs, unrolls)
+    keep = select_band(preds, margin)
+    grid = [(dp, u) for dp in designs for u in unrolls]
+    _vlog(verbose,
+          f"{pt.trace.name}: surrogate ranked {len(grid)} points in "
+          f"{time.perf_counter() - t0:.3f}s; band kept {sum(keep)} "
+          f"(margin {margin:g})")
+
+    results: dict[int, DSEPoint] = {}
+    todo: list[tuple[int, "str | None"]] = []
+    for i, k in enumerate(keep):
+        if not k:
+            continue
+        dp, u = grid[i]
+        key = (point_key(pt.fingerprint, dp, u, mem_latency)
+               if cache else None)
+        hit = cache.get(key) if cache else None
+        if hit is not None:
+            results[i] = hit
+        else:
+            todo.append((i, key))
+    n_hits = sum(keep) - len(todo)
+
+    if todo:
+        t0 = time.perf_counter()
+        out = evaluate_points(pt, [grid[i] for i, _ in todo], mem_latency,
+                              front_cap=True)
+        capped = 0
+        for (i, key), p in zip(todo, out):
+            if p is None:
+                capped += 1
+                continue
+            results[i] = p
+            if cache:
+                cache.put(key, p)
+        _vlog(verbose,
+              f"{pt.trace.name}: simulated {len(todo) - capped} points "
+              f"({capped} front-capped, {n_hits} cache hits) in "
+              f"{time.perf_counter() - t0:.3f}s")
+    return [results[i] for i in sorted(results)]
+
+
 def _run_batched_jax(
     pt: PreparedTrace,
     tasks: "list[tuple[int, DesignPoint, int]]",
@@ -249,6 +368,9 @@ def run_sweep(
     cache_dir: "str | Path | None" = None,
     cache: "SweepCache | None" = None,
     backend: str = "auto",
+    prune: "str | None" = None,
+    margin: "float | None" = None,
+    verbose: bool = False,
 ) -> list[DSEPoint]:
     """Evaluate every ``(design, unroll)`` composition on one trace.
 
@@ -270,14 +392,41 @@ def run_sweep(
         ``jax`` (whole-grid ``schedule_batched``; bypasses the process
         pool, keeps the on-disk cache).  All backends produce bitwise
         identical points, so cache entries are backend-independent.
+      prune: ``"surrogate"`` ranks the grid with the analytic cycle
+        predictor and exact-simulates only the predicted Pareto band
+        (one batched C call with in-C front caps).  Returns a
+        designs-major *subsequence* of the grid that still contains the
+        exact time/area Pareto front; points it does return are bitwise
+        identical to the exhaustive sweep (and share its cache entries).
+        The surrogate is calibrated at ``mem_latency == 2``; other
+        latencies fall back to the exhaustive sweep.  The pruned path
+        evaluates through the batched C scheduler, ignoring ``jobs``
+        and ``backend``.
+      margin: safety slack on predicted time for the surrogate band
+        (default :data:`repro.core.dse.surrogate.DEFAULT_MARGIN`).
+      verbose: per-chunk progress lines on stderr (points done/total,
+        cache hits, chunk wall-clock).
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, "
                          f"got {backend!r}")
+    if prune not in (None, "surrogate"):
+        raise ValueError(f"prune must be None or 'surrogate', got {prune!r}")
     unrolls = tuple(unrolls)
     pt = prepare_trace(tr)
     if cache is None:
         cache = _resolve_cache(cache_dir)
+
+    if prune == "surrogate":
+        from repro.core.dse.surrogate import CALIBRATED_MEM_LATENCY
+
+        if mem_latency == CALIBRATED_MEM_LATENCY:
+            return _run_pruned(pt, designs, unrolls, mem_latency, cache,
+                               margin, verbose)
+        _vlog(verbose,
+              f"{pt.trace.name}: surrogate calibrated at mem_latency="
+              f"{CALIBRATED_MEM_LATENCY}, got {mem_latency}: "
+              "running exhaustive")
 
     tasks: list[tuple[int, DesignPoint, int]] = []
     results: list["DSEPoint | None"] = []
@@ -292,6 +441,12 @@ def run_sweep(
             keys.append(key)
             if hit is None:
                 tasks.append((idx, dp, u))
+
+    total = len(designs) * len(unrolls)
+    n_cached = total - len(tasks)
+    _vlog(verbose, f"{pt.trace.name}: {n_cached}/{total} points cached, "
+                   f"{len(tasks)} to evaluate")
+    done = n_cached
 
     n_jobs = jobs or 0
     if backend == "jax":
@@ -311,20 +466,37 @@ def run_sweep(
                 futs = [pool.submit(_worker_eval_chunk, pt.fingerprint,
                                     None, c, mem_latency, backend)
                         for c in chunks]
-                for fut in futs:
+                t0 = time.perf_counter()
+                for fut, chunk in zip(futs, chunks):
                     for idx, point in fut.result():
                         results[idx] = point
+                    done += len(chunk)
+                    _vlog(verbose,
+                          f"{pt.trace.name}: chunk of {len(chunk)} done "
+                          f"({done}/{total}) at "
+                          f"{time.perf_counter() - t0:.3f}s")
         else:
             pool = _get_pool(n_jobs)
             futs = [pool.submit(_worker_eval_chunk, pt.fingerprint, bare,
                                 c, mem_latency, backend) for c in chunks]
-            for fut in futs:
+            t0 = time.perf_counter()
+            for fut, chunk in zip(futs, chunks):
                 for idx, point in fut.result():
                     results[idx] = point
+                done += len(chunk)
+                _vlog(verbose,
+                      f"{pt.trace.name}: chunk of {len(chunk)} done "
+                      f"({done}/{total}) at {time.perf_counter() - t0:.3f}s")
     else:
-        for idx, dp, u in tasks:
-            results[idx] = evaluate_point(pt, dp, u, mem_latency,
-                                          backend=backend)
+        for chunk in _chunked(tasks, max(1, (len(tasks) + 15) // 16)):
+            t0 = time.perf_counter()
+            for idx, dp, u in chunk:
+                results[idx] = evaluate_point(pt, dp, u, mem_latency,
+                                              backend=backend)
+            done += len(chunk)
+            _vlog(verbose,
+                  f"{pt.trace.name}: chunk of {len(chunk)} in "
+                  f"{time.perf_counter() - t0:.3f}s ({done}/{total})")
 
     if cache:
         for idx, _, _ in tasks:
@@ -332,6 +504,78 @@ def run_sweep(
 
     assert all(p is not None for p in results)
     return results  # type: ignore[return-value]
+
+
+def run_sweep_bench(
+    bench: str,
+    designs: Sequence[DesignPoint] = DEFAULT_DESIGNS,
+    unrolls: Iterable[int] = DEFAULT_UNROLLS,
+    *,
+    params=None,
+    full: bool = False,
+    mem_latency: int = 2,
+    jobs: "int | None" = None,
+    cache_dir: "str | Path | None" = None,
+    cache: "SweepCache | None" = None,
+    backend: str = "auto",
+    prune: "str | None" = None,
+    margin: "float | None" = None,
+    verbose: bool = False,
+    stats: "dict | None" = None,
+) -> list[DSEPoint]:
+    """Sweep a registered benchmark by name, with a cold fast path.
+
+    When every grid point is already cached, the sweep never generates
+    or prepares the trace: the cache's ``manifest.json`` maps the
+    benchmark identity (:func:`repro.core.bench.trace_cache_key` — pure
+    in the generator source + params) to the trace fingerprint, and the
+    points are served straight from disk in designs-major order.  Any
+    miss falls through to :func:`run_sweep` on the real trace, which
+    then records the manifest entry for next time.
+
+    The fast path always returns the *full* grid — with every point
+    cached, pruning would save nothing.  ``stats`` (optional dict) gets
+    ``fast_path`` (bool) and, when the trace was prepared,
+    ``prepared`` (the :class:`PreparedTrace`).
+    """
+    import repro.core.bench as bench_mod
+
+    if cache is None:
+        cache = _resolve_cache(cache_dir)
+    unrolls = tuple(unrolls)
+    bkey = bench_mod.trace_cache_key(bench, params, full=full)
+
+    if cache is not None:
+        fp = cache.manifest_get(bkey)
+        if fp is not None:
+            hits: "list[DSEPoint] | None" = []
+            for dp in designs:
+                for u in unrolls:
+                    hit = cache.get(point_key(fp, dp, u, mem_latency))
+                    if hit is None:
+                        hits = None
+                        break
+                    hits.append(hit)
+                if hits is None:
+                    break
+            if hits is not None:
+                _vlog(verbose, f"{bench}: fully cached ({len(hits)} "
+                               "points), trace generation skipped")
+                if stats is not None:
+                    stats["fast_path"] = True
+                return hits
+
+    tr = bench_mod.get_trace(bench, params, full=full)
+    pt = prepare_trace(tr)
+    if stats is not None:
+        stats["fast_path"] = False
+        stats["prepared"] = pt
+    res = run_sweep(pt, designs, unrolls, mem_latency=mem_latency,
+                    jobs=jobs, cache=cache, backend=backend, prune=prune,
+                    margin=margin, verbose=verbose)
+    if cache is not None:
+        cache.manifest_put(bkey, pt.fingerprint)
+    return res
 
 
 # ----------------------------------------------------------------------
@@ -344,7 +588,7 @@ def _parse_unrolls(text: str) -> tuple[int, ...]:
 def main(argv: "Sequence[str] | None" = None) -> None:
     import argparse
 
-    from repro.core.bench import BENCHMARKS, get_trace
+    from repro.core.bench import BENCHMARKS
     from repro.core.dse.pareto import design_space_expansion, pareto_front
 
     ap = argparse.ArgumentParser(
@@ -365,35 +609,55 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     ap.add_argument("--backend", choices=BACKENDS, default="auto",
                     help="cycle-loop backend (jax = one batched jit call "
                          "for the whole grid, bypassing the process pool)")
+    ap.add_argument("--prune", choices=("surrogate",), default=None,
+                    help="surrogate-pruned sweep: exact-simulate only the "
+                         "predicted Pareto band (subset output; exact "
+                         "front preserved)")
+    ap.add_argument("--margin", type=float, default=None,
+                    help="surrogate band safety margin on predicted time "
+                         "(default: surrogate.DEFAULT_MARGIN)")
+    ap.add_argument("--front-only", action="store_true",
+                    help="emit only Pareto-front rows (grid order kept); "
+                         "pruned and exhaustive sweeps agree on this "
+                         "output, so it diffs clean")
+    ap.add_argument("--verbose", action="store_true",
+                    help="per-chunk progress lines on stderr")
     args = ap.parse_args(argv)
 
-    tr = get_trace(args.bench, full=args.full)
-    t0 = time.perf_counter()
-    pt = prepare_trace(tr)
-    t_prep = time.perf_counter() - t0
-
     cache = _resolve_cache(args.cache_dir)
+    stats: dict = {}
     t0 = time.perf_counter()
-    pts = run_sweep(pt, DEFAULT_DESIGNS, args.unrolls,
-                    mem_latency=args.mem_latency, jobs=args.jobs,
-                    cache=cache, backend=args.backend)
+    pts = run_sweep_bench(args.bench, DEFAULT_DESIGNS, args.unrolls,
+                          full=args.full, mem_latency=args.mem_latency,
+                          jobs=args.jobs, cache=cache,
+                          backend=args.backend, prune=args.prune,
+                          margin=args.margin, verbose=args.verbose,
+                          stats=stats)
     t_sweep = time.perf_counter() - t0
+
+    emit = pts
+    if args.front_only:
+        on_front = {(p.design, p.unroll) for p in pareto_front(pts)}
+        emit = [p for p in pts if (p.design, p.unroll) in on_front]
 
     # header and rows both derive from DSEPoint.row(): new fields (e.g.
     # cycle_ns) appear in the CSV automatically instead of drifting
     cols = [f.name for f in dataclasses.fields(DSEPoint)]
     print(",".join(cols))
-    for p in pts:
+    for p in emit:
         row = p.row()
         print(",".join(f"{row[c]:.6g}" if isinstance(row[c], float)
                        else str(row[c]) for c in cols))
 
     banking = [p for p in pts if not p.is_amm]
     amm = [p for p in pts if p.is_amm]
-    print(f"# nodes={pt.n_nodes} locality={pt.locality:.3f} "
-          f"points={len(pts)} prep={t_prep*1e3:.1f}ms "
+    pt = stats.get("prepared")
+    trace_info = (f"nodes={pt.n_nodes} locality={pt.locality:.3f}"
+                  if pt is not None else "trace=cached-manifest")
+    print(f"# {trace_info} points={len(pts)} "
           f"sweep={t_sweep*1e3:.1f}ms jobs={args.jobs} "
-          f"backend={args.backend}")
+          f"backend={args.backend}"
+          + (f" prune={args.prune}" if args.prune else ""))
     if banking and amm:
         print(f"# expansion={design_space_expansion(banking, amm):.2f} "
               f"pareto_banked={len(pareto_front(banking))} "

@@ -173,6 +173,66 @@ def evaluate_point(
     return point_from_schedule(pt, dp, unroll, cfg, res)
 
 
+def _point_static_cost(cfg: ScheduleConfig, unroll: int) -> tuple[float, float]:
+    """(area_mm2, cycle_ns) of a point before any simulation.
+
+    Must mirror :func:`point_from_schedule` exactly — the batched front
+    cap compares cheap-config times against these areas, so a mismatch
+    would silently break cap soundness."""
+    costs = [memory_cost(s) for s in cfg.mem.values()]
+    cycle_ns = max([_MIN_CYCLE_NS] + [c.cycle_ns for c in costs])
+    area = sum(c.area_mm2 for c in costs)
+    area += sum(FU_AREA_MM2[k] * v * unroll for k, v in _BASE_FU.items())
+    return area, cycle_ns
+
+
+def evaluate_points(
+    tr: "T.Trace | PreparedTrace",
+    points: "Sequence[tuple[DesignPoint, int]]",
+    mem_latency: int = 2,
+    *,
+    front_cap: bool = False,
+) -> "list[DSEPoint | None]":
+    """Evaluate many ``(design, unroll)`` points in one batched C call.
+
+    The whole column of configs runs against a single resident
+    :class:`PreparedTrace` inside one extension call — no per-point
+    marshalling of the trace arrays.  Results are bitwise identical to
+    per-point :func:`evaluate_point` calls and come back in input order.
+
+    With ``front_cap=True`` the batch runs internally in ascending-area
+    order and the C loop abandons any config once its elapsed time
+    provably exceeds a strictly cheaper completed config's time (such a
+    point cannot be on the time/area Pareto front).  Abandoned points
+    return ``None``; the surviving points still contain every member of
+    the exact Pareto front.
+    """
+    from repro.core.sim.scheduler import schedule_batch
+
+    pt = prepare_trace(tr)
+    cfgs = [schedule_config_for(pt, dp, u, mem_latency) for dp, u in points]
+    if not front_cap:
+        results = schedule_batch(pt, cfgs)
+        return [point_from_schedule(pt, dp, u, cfg, r)
+                for (dp, u), cfg, r in zip(points, cfgs, results)]
+
+    statics = [_point_static_cost(cfg, u)
+               for cfg, (_, u) in zip(cfgs, points)]
+    order = sorted(range(len(points)), key=lambda i: statics[i][0])
+    results = schedule_batch(
+        pt, [cfgs[i] for i in order],
+        areas=[statics[i][0] for i in order],
+        cycle_ns=[statics[i][1] for i in order],
+        front_cap=True)
+    out: "list[DSEPoint | None]" = [None] * len(points)
+    for rank, i in enumerate(order):
+        res = results[rank]
+        if res is not None:
+            dp, u = points[i]
+            out[i] = point_from_schedule(pt, dp, u, cfgs[i], res)
+    return out
+
+
 def point_from_schedule(
     tr: "T.Trace | PreparedTrace",
     dp: DesignPoint,
@@ -235,16 +295,22 @@ def sweep(
     jobs: int | None = None,
     cache_dir: "str | None" = None,
     backend: str = "auto",
+    prune: "str | None" = None,
+    margin: "float | None" = None,
+    verbose: bool = False,
 ) -> list[DSEPoint]:
     """Evaluate ``designs x unrolls`` on one trace.
 
     Thin wrapper over :func:`repro.core.dse.runner.run_sweep`: pass
     ``jobs`` for multi-process evaluation, ``cache_dir`` for the
-    on-disk result cache and ``backend`` to pick the cycle-loop
-    implementation (``auto``/``c``/``py``/``jax``).  Point order is
-    always ``designs``-major, ``unrolls``-minor, independent of
-    parallelism, backend or cache hits.
+    on-disk result cache, ``backend`` to pick the cycle-loop
+    implementation (``auto``/``c``/``py``/``jax``) and
+    ``prune="surrogate"`` for the analytically pruned sweep (returns a
+    subset of the grid that still contains the exact Pareto front).
+    Point order is always ``designs``-major, ``unrolls``-minor,
+    independent of parallelism, backend or cache hits.
     """
     from repro.core.dse.runner import run_sweep
     return run_sweep(tr, designs, unrolls, mem_latency=mem_latency,
-                     jobs=jobs, cache_dir=cache_dir, backend=backend)
+                     jobs=jobs, cache_dir=cache_dir, backend=backend,
+                     prune=prune, margin=margin, verbose=verbose)

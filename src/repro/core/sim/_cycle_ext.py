@@ -17,6 +17,7 @@ import os
 _SRC = os.path.join(os.path.dirname(__file__), "_cycle_loop.c")
 _FN = None
 _ANALYZE = None
+_BATCH = None
 _TRIED = False
 
 
@@ -29,7 +30,7 @@ def _cache_dir() -> str:
 
 def load():
     """Return the compiled ``run_schedule`` or ``None`` if unavailable."""
-    global _FN, _ANALYZE, _TRIED
+    global _FN, _ANALYZE, _BATCH, _TRIED
     if _TRIED:
         return _FN
     _TRIED = True
@@ -70,11 +71,24 @@ def load():
         an = lib.analyze_graph
         an.restype = None
         an.argtypes = [i64] + [i64p] * 7
+        f64p = ctypes.POINTER(ctypes.c_double)
+        bt = lib.run_schedule_batch
+        bt.restype = i64
+        bt.argtypes = (
+            [i64, i64, i64, i64]           # n, n_arrays, n_classes, n_cfg
+            + [i64p] * 4                   # succ_ptr, succ_idx, indegree, height
+            + [u8p, i64p, i64p, i64p]      # is_load, node_lat, word_idx, klass_id
+            + [i64p, i64p, i64p]           # fu_budgets_all, desc_all, mem_lat_all
+            + [i64, i64, i64]              # ports_per_bank, max_cycles, cap_mode
+            + [f64p, f64p]                 # area_all, ns_all
+            + [i64p, i64p])                # status_all, out_all
         _FN = fn
         _ANALYZE = an
+        _BATCH = bt
     except Exception:
         _FN = None
         _ANALYZE = None
+        _BATCH = None
     return _FN
 
 
@@ -82,3 +96,9 @@ def load_analyze():
     """Return the compiled ``analyze_graph`` or ``None``."""
     load()
     return _ANALYZE
+
+
+def load_batch():
+    """Return the compiled ``run_schedule_batch`` or ``None``."""
+    load()
+    return _BATCH

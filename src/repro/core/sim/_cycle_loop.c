@@ -539,3 +539,73 @@ cleanup:
     free(remap_map); free(map_off);
     return rc;
 }
+
+/* Batched grid evaluation: every config of one design column against
+ * the same resident trace in a single extension call, so a sweep stops
+ * paying per-point Python dispatch and ctypes marshalling.
+ *
+ * With cap_mode != 0 the caller passes configs in ascending area order
+ * together with each config's area and cycle time (ns); before config
+ * c runs, its cycle budget is tightened to the best completed time
+ * among strictly-cheaper configs.  A run abandoned at that cap has
+ * time > min(cheaper completed time), so some cheaper config is at
+ * least as fast and c can never appear on the time/area Pareto front —
+ * it is marked capped instead of simulated to completion.
+ *
+ * status_all[c]:  0 completed | 1 abandoned at the front cap |
+ *                 <0 run_schedule error code for that config.
+ * Returns the number of configs with negative status. */
+i64 run_schedule_batch(
+    i64 n, i64 n_arrays, i64 n_classes, i64 n_cfg,
+    const i64 *succ_ptr, const i64 *succ_idx,
+    const i64 *indegree, const i64 *height,
+    const u8 *is_load, const i64 *node_lat,
+    const i64 *word_idx, const i64 *klass_id,
+    const i64 *fu_budgets_all,   /* [n_cfg * (n_classes - n_arrays)] */
+    const i64 *desc_all,         /* [n_cfg * n_arrays * N_FIELDS] */
+    const i64 *mem_latency_all,  /* [n_cfg] */
+    i64 ports_per_bank, i64 max_cycles, i64 cap_mode,
+    const double *area_all,      /* [n_cfg], ascending (cap_mode) */
+    const double *ns_all,        /* [n_cfg] cycle ns (cap_mode) */
+    i64 *status_all,             /* [n_cfg] out */
+    i64 *out_all)                /* [n_cfg * (9 + n_arrays)] out */
+{
+    i64 n_fu = n_classes - n_arrays;
+    i64 out_stride = 9 + n_arrays;
+    i64 n_err = 0;
+    for (i64 c = 0; c < n_cfg; c++) {
+        i64 budget = max_cycles;
+        if (cap_mode) {
+            double tmin = -1.0;
+            for (i64 q = 0; q < c; q++) {
+                if (status_all[q] != 0) continue;
+                if (area_all[q] > area_all[c] - 1e-12) continue;
+                double t = (double)out_all[q * out_stride] * ns_all[q];
+                if (tmin < 0.0 || t < tmin) tmin = t;
+            }
+            if (tmin >= 0.0) {
+                double cap = tmin / ns_all[c];
+                if (cap < (double)max_cycles) {
+                    i64 icap = (i64)cap + 1;   /* >= tmin/ns, so an
+                                                  abandoned run is
+                                                  strictly slower */
+                    if (icap < budget) budget = icap;
+                }
+            }
+        }
+        i64 rc = run_schedule(
+            n, n_arrays, n_classes, succ_ptr, succ_idx, indegree, height,
+            is_load, node_lat, word_idx, klass_id,
+            fu_budgets_all + c * n_fu,
+            desc_all + (size_t)c * n_arrays * N_FIELDS,
+            mem_latency_all[c], ports_per_bank, budget,
+            out_all + c * out_stride);
+        if (rc == -1 && budget < max_cycles) {
+            status_all[c] = 1;                 /* front-capped */
+        } else {
+            status_all[c] = rc;
+            if (rc < 0) n_err++;
+        }
+    }
+    return n_err;
+}

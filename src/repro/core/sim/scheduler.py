@@ -197,6 +197,147 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
     )
 
 
+def schedule_batch(tr: "T.Trace | PreparedTrace", cfgs: "list[ScheduleConfig]",
+                   *, areas: "list[float] | None" = None,
+                   cycle_ns: "list[float] | None" = None,
+                   front_cap: bool = False) -> "list[ScheduleResult | None]":
+    """Evaluate many configs against one resident trace in a single C call.
+
+    The per-trace analysis (successor CSR, heights, classes) is paid once
+    and every config reuses the resident arrays; only the per-config
+    descriptor matrices and FU budgets are marshalled.  Results are
+    cycle-exact and identical to per-point :func:`schedule` calls.
+
+    With ``front_cap=True`` (requires ``areas`` and ``cycle_ns``, one per
+    config, ideally in ascending-area order), the C loop abandons a
+    config once its elapsed time provably exceeds the best completed time
+    of a strictly cheaper config — such a point cannot be on the
+    time/area Pareto front (the front keeps a point only if *no* cheaper
+    point is at least as fast).  Abandoned configs return ``None`` in the
+    result list; completed configs are exact.
+
+    Falls back to the per-point Python loop when the compiled batch entry
+    is unavailable or a config exceeds the C path buffers (then no
+    capping happens: every slot gets an exact result).
+    """
+    pt = prepare_trace(tr)
+    if not cfgs:
+        return []
+    if front_cap and (areas is None or cycle_ns is None):
+        raise ValueError("front_cap=True requires areas and cycle_ns")
+    bt = _cycle_ext.load_batch()
+    if bt is not None:
+        res = _schedule_c_batch(bt, pt, cfgs, areas=areas,
+                                cycle_ns=cycle_ns, front_cap=front_cap)
+        if res is not None:
+            return res
+    return [_schedule_py(pt, c) for c in cfgs]
+
+
+def _schedule_c_batch(bt, pt: PreparedTrace, cfgs, *, areas, cycle_ns,
+                      front_cap) -> "list[ScheduleResult | None] | None":
+    import ctypes
+
+    import numpy as np
+
+    trace = pt.trace
+    n = trace.n_nodes
+    n_arrays = pt.n_arrays
+    n_classes = n_arrays + len(FU_ORDER)
+    n_cfg = len(cfgs)
+
+    ports_per_bank = cfgs[0].ports_per_bank
+    max_cycles = cfgs[0].max_cycles
+    if any(c.ports_per_bank != ports_per_bank or c.max_cycles != max_cycles
+           for c in cfgs):
+        return None                        # mixed globals: caller's problem
+
+    # Per-config descriptor matrices; configs beyond the fixed C path
+    # buffers are evaluated by the (identical-result) Python loop.
+    batch_idx: list[int] = []
+    desc_rows: list = [None] * n_cfg
+    for i, cfg in enumerate(cfgs):
+        descs = _descriptors(pt, cfg)
+        if any(d is not None and d.kind in _NTX_KINDS
+               and (1 << d.levels) > _MAX_C_PARITY_PATHS for d in descs):
+            continue
+        batch_idx.append(i)
+        desc_rows[i] = descriptor_matrix(descs)
+
+    results: "list[ScheduleResult | None]" = [None] * n_cfg
+    py_idx = [i for i in range(n_cfg) if desc_rows[i] is None]
+
+    nb = len(batch_idx)
+    if nb:
+        desc_all = np.ascontiguousarray(
+            np.stack([desc_rows[i] for i in batch_idx]), np.int64)
+        fu_all = np.asarray(
+            [[cfgs[i].fu_counts.get(name, 1) for name in FU_ORDER]
+             for i in batch_idx], np.int64)
+        lat_all = np.asarray([cfgs[i].mem_latency for i in batch_idx],
+                             np.int64)
+        if front_cap:
+            area_all = np.asarray([areas[i] for i in batch_idx], np.float64)
+            ns_all = np.asarray([cycle_ns[i] for i in batch_idx], np.float64)
+        else:
+            area_all = np.zeros(nb, np.float64)
+            ns_all = np.ones(nb, np.float64)
+        status = np.zeros(nb, np.int64)
+        out_all = np.zeros(nb * (9 + n_arrays), np.int64)
+
+        i64p = ctypes.POINTER(ctypes.c_longlong)
+        u8p = ctypes.POINTER(ctypes.c_ubyte)
+        f64p = ctypes.POINTER(ctypes.c_double)
+
+        def ip(a):
+            return a.ctypes.data_as(i64p)
+
+        bt(n, n_arrays, n_classes, nb,
+           ip(pt.succ_ptr), ip(pt.succ_idx), ip(pt.indegree), ip(pt.height),
+           pt.is_load_np.ctypes.data_as(u8p), ip(pt.latency_np),
+           ip(pt.word_index_np), ip(pt.klass_np),
+           ip(fu_all), ip(desc_all), ip(lat_all),
+           ports_per_bank, max_cycles, 1 if front_cap else 0,
+           area_all.ctypes.data_as(f64p), ns_all.ctypes.data_as(f64p),
+           ip(status), ip(out_all))
+
+        stride = 9 + n_arrays
+        for j, i in enumerate(batch_idx):
+            st = int(status[j])
+            if st == 1:
+                continue                   # front-capped: stays None
+            if st == -1:
+                raise RuntimeError(
+                    f"scheduler exceeded {max_cycles} cycles")
+            if st == -2:
+                raise RuntimeError(
+                    "deadlock: nodes remain but nothing ready/inflight")
+            if st == -3:
+                raise KeyError(
+                    "memory op on array without a ScheduleConfig.mem spec")
+            if st != 0:
+                py_idx.append(i)           # allocation failure: fall back
+                continue
+            out = out_all[j * stride:(j + 1) * stride]
+            results[i] = ScheduleResult(
+                cycles=int(out[0]),
+                issued=int(out[1]),
+                mem_issued=int(out[2]),
+                bank_conflict_stalls=int(out[3]),
+                parity_fanout_stalls=int(out[5]),
+                write_pair_stalls=int(out[6]),
+                parity_path_reads=int(out[7]),
+                write_pair_rmws=int(out[8]),
+                per_array_accesses={a: int(out[9 + a])
+                                    for a in trace.array_names},
+                avg_mem_parallelism=int(out[2]) / max(int(out[4]), 1),
+            )
+
+    for i in py_idx:
+        results[i] = _schedule_py(pt, cfgs[i])
+    return results
+
+
 def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
     trace = pt.trace
     n = trace.n_nodes

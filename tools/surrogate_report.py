@@ -1,0 +1,105 @@
+"""Surrogate-error report: analytic predictions vs the golden matrix.
+
+Emits one CSV row per pinned golden schedule row (the 12-bench x
+13-design x {1,4} calibration matrix) with the surrogate's predicted
+cycles, the pinned true cycles, the relative error, and the per-bench
+Spearman rank correlation.  CI publishes the CSV next to the Fig-4
+sweep artifacts so predictor drift is visible per commit; the hard
+accuracy gates live in ``tests/test_surrogate.py``.
+
+Usage::
+
+    PYTHONPATH=src python tools/surrogate_report.py [--csv out.csv]
+
+With no ``--csv`` the report goes to stdout.  The trailing ``#``
+summary line carries the aggregate stats (median/max relative error,
+worst per-bench rho).
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.bench import get_trace
+from repro.core.dse.ratio import spearman_rho
+from repro.core.dse.surrogate import CALIBRATION_DESIGNS, TraceFeatures, predict
+from repro.core.sim import prepare_trace
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parents[1]
+               / "tests" / "golden_schedule.json")
+
+
+def build_report() -> "tuple[list[dict], dict]":
+    """Per-row records plus aggregate stats over the golden matrix."""
+    golden = json.loads(GOLDEN_PATH.read_text())
+    by_bench: dict = collections.defaultdict(list)
+    for g in golden:
+        by_bench[g["bench"]].append(g)
+
+    records, rel_all, rhos = [], [], {}
+    for bench in sorted(by_bench):
+        pt = prepare_trace(get_trace(bench))
+        feats = TraceFeatures(pt)
+        preds, truths = [], []
+        for g in by_bench[bench]:
+            dp = CALIBRATION_DESIGNS[g["design"]]
+            p = predict(pt, dp, g["unroll"], feats)
+            rel = abs(p.cycles - g["cycles"]) / g["cycles"]
+            preds.append(p.cycles)
+            truths.append(g["cycles"])
+            rel_all.append(rel)
+            records.append({
+                "bench": bench, "design": g["design"],
+                "unroll": g["unroll"], "true_cycles": g["cycles"],
+                "pred_cycles": p.cycles, "rel_err": rel,
+            })
+        rhos[bench] = spearman_rho(truths, preds)
+
+    for r in records:
+        r["bench_rho"] = rhos[r["bench"]]
+    rel_all.sort()
+    finite = [r for r in rhos.values() if r == r]
+    stats = {
+        "rows": len(records),
+        "median_rel_err": rel_all[len(rel_all) // 2],
+        "max_rel_err": rel_all[-1],
+        "min_bench_rho": min(finite),
+    }
+    return records, stats
+
+
+def main(argv: "list[str] | None" = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Surrogate cycle-predictor error report "
+                    "(vs tests/golden_schedule.json).")
+    ap.add_argument("--csv", default=None,
+                    help="write the report here instead of stdout")
+    args = ap.parse_args(argv)
+
+    records, stats = build_report()
+    cols = ("bench", "design", "unroll", "true_cycles", "pred_cycles",
+            "rel_err", "bench_rho")
+    lines = [",".join(cols)]
+    for r in records:
+        lines.append(",".join(
+            f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
+            for c in cols))
+    lines.append(f"# rows={stats['rows']} "
+                 f"median_rel_err={stats['median_rel_err']:.4f} "
+                 f"max_rel_err={stats['max_rel_err']:.4f} "
+                 f"min_bench_rho={stats['min_bench_rho']:.4f}")
+    text = "\n".join(lines) + "\n"
+    if args.csv:
+        pathlib.Path(args.csv).write_text(text)
+        print(f"wrote {args.csv}: {lines[-1][2:]}")
+    else:
+        sys.stdout.write(text)
+
+
+if __name__ == "__main__":
+    main()
