@@ -9,6 +9,8 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   scheduler_batched — batched JAX grid vs per-point C / python loops
   dse_matrix        — full 12x13 DSE matrix: exhaustive C vs
                       surrogate-pruned batched-C vs warm cache
+  fault_campaign    — seeded fault-injection campaigns per design kind
+                      (SDC rate / corrected / detected fractions)
   lm_smoke_bench    — tiny-arch train/decode step wall times (CPU)
 
 Full-size runs: ``python -m benchmarks.run --full`` (minutes).
@@ -445,6 +447,33 @@ def dse_matrix() -> None:
          f"points={n_pts};speedup={t_exh / t_warm:.1f}x")
 
 
+def fault_campaign() -> None:
+    """Seeded fault-injection campaigns per design kind (ISSUE 7): wall
+    time of one batched campaign plus the resilience record — SDC rate,
+    corrected/detected fractions of affected reads, mean detection
+    latency.  Smoke runs use the golden campaign shape
+    (32 faults x 96 cycles, seed 7) so rows are directly comparable to
+    ``tests/golden_faults.json``; ``--full`` widens the population."""
+    from repro.core.dse.sweep import DEFAULT_DESIGNS, _spec_for
+    from repro.core.fault import FaultConfig, run_campaign
+
+    labels = ("banked8", "multipump-2R2W", "h_ntx_rd-4R1W", "b_ntx_wr-1R2W",
+              "hb_ntx-4R2W", "lvt-2R2W", "lvt-4R2W", "remap-4R2W")
+    cfg = FaultConfig(n_faults=128, n_cycles=256, seed=7) if FULL \
+        else FaultConfig(n_faults=32, n_cycles=96, seed=7)
+    by_label = {d.label: d for d in DEFAULT_DESIGNS}
+    for label in labels:
+        spec = _spec_for(by_label[label], 256, 32)
+        t0 = time.perf_counter()
+        res = run_campaign(spec, cfg)
+        us = (time.perf_counter() - t0) * 1e6
+        r = res.resilience
+        _row(f"fault_campaign.{label}", us,
+             f"cover={r.cover};faults={r.n_faults};"
+             f"sdc_rate={r.sdc_rate:.4f};corrected={r.corrected_frac:.3f};"
+             f"detected={r.detected_frac:.3f};latency={r.det_latency:.2f}")
+
+
 def lm_smoke_bench() -> None:
     """Tiny-config train/decode step wall time per assigned arch."""
     import jax
@@ -524,6 +553,7 @@ TABLES = {
     "scheduler_microbench": scheduler_microbench,
     "scheduler_batched": scheduler_batched,
     "dse_matrix": dse_matrix,
+    "fault_campaign": fault_campaign,
     "lm_smoke_bench": lm_smoke_bench,
     "grad_sync_bench": grad_sync_bench,
 }

@@ -49,6 +49,7 @@ __all__ = [
     "ReplayResult", "HTables", "h_tables",
     "init_flat", "flatten_state", "unflatten_state", "peek_flat",
     "replay", "replay_batched", "make_trace",
+    "FaultMask", "zero_fault", "replay_faulty", "replay_faulty_batched",
 ]
 
 
@@ -470,6 +471,120 @@ def replay_batched(spec: AMMSpec, states: FlatState, read_addrs, write_addrs,
     """
     return _replay_vmap(spec, share_trace)(
         states, *_as_ops(read_addrs, write_addrs, write_vals, write_mask))
+
+
+# ======================================================================
+# Fault injection (repro.core.fault drives this; see that package for
+# the sampling / classification layer)
+# ======================================================================
+class FaultMask(NamedTuple):
+    """One physical fault, lowered to per-state-array masks.
+
+    Applied inside the replay ``lax.scan`` body at the start of every
+    cycle, *before* the cycle's reads — so reads from cycle ``cycle``
+    onward observe the corrupted storage, and in-cycle writes behave
+    like real hardware (a later write overwrites a transient flip; a
+    stuck bit re-asserts itself every cycle, so writes never take).
+
+    ``cycle``      int32 scalar — the injection cycle.
+    ``xor_once``   per-key array XORed into the state at ``cycle`` only
+                   (transient single-event upset; heals on overwrite).
+    ``stuck_mask`` per-key bit mask forced from ``cycle`` onward.
+    ``stuck_val``  the value those bits are forced to (stuck-at-0/1 and
+                   whole-bank loss = a full-word mask stuck to zero).
+
+    Every key of the design's flat state must be present (zeros =
+    untouched); :func:`zero_fault` builds the no-op template.  All
+    leading axes may carry a batch dimension for
+    :func:`replay_faulty_batched`.
+    """
+
+    cycle: jax.Array
+    xor_once: FlatState
+    stuck_mask: FlatState
+    stuck_val: FlatState
+
+
+def zero_fault(spec: AMMSpec) -> FaultMask:
+    """The identity fault (all masks zero) for ``spec``'s flat state."""
+    tmpl = init_flat(spec)
+
+    def zeros() -> FlatState:
+        return {k: jnp.zeros_like(v) for k, v in tmpl.items()}
+
+    return FaultMask(jnp.int32(0), zeros(), zeros(), zeros())
+
+
+def _apply_fault(state: FlatState, fm: FaultMask, cycle) -> FlatState:
+    armed = cycle >= fm.cycle
+    once = cycle == fm.cycle
+    out = {}
+    for k, v in state.items():
+        xo = fm.xor_once[k].astype(v.dtype)
+        sm = fm.stuck_mask[k].astype(v.dtype)
+        sv = fm.stuck_val[k].astype(v.dtype)
+        v = jnp.where(once, v ^ xo, v)
+        out[k] = jnp.where(armed, (v & ~sm) | (sv & sm), v)
+    return out
+
+
+def _replay_fault_impl(spec: AMMSpec, state: FlatState, fm: FaultMask,
+                       read_addrs, write_addrs, write_vals, write_mask):
+    step = _step_fn(spec)
+
+    def body(carry, xs):
+        st, cyc = carry
+        st = _apply_fault(st, fm, cyc)
+        ra, wa, wv, wm = xs
+        st, out = step(st, ra, wa, wv, wm)
+        return (st, cyc + 1), out
+
+    (state, _), (vals, parity, aux) = jax.lax.scan(
+        body, (state, jnp.int32(0)),
+        (read_addrs, write_addrs, write_vals, write_mask))
+    return state, ReplayResult(vals, parity, aux)
+
+
+@lru_cache(maxsize=None)
+def _replay_fault_jit(spec: AMMSpec) -> Callable:
+    return jax.jit(partial(_replay_fault_impl, spec))
+
+
+@lru_cache(maxsize=None)
+def _replay_fault_vmap(spec: AMMSpec, share_trace: bool) -> Callable:
+    trace_ax = None if share_trace else 0
+    return jax.jit(jax.vmap(partial(_replay_fault_impl, spec),
+                            in_axes=(0, 0) + (trace_ax,) * 4))
+
+
+def replay_faulty(spec: AMMSpec, state: FlatState, fault: FaultMask,
+                  read_addrs, write_addrs, write_vals, write_mask
+                  ) -> tuple[FlatState, ReplayResult]:
+    """:func:`replay` with ``fault`` injected inside the scan body.
+
+    With :func:`zero_fault` masks the result is bit-identical to the
+    clean replay (pinned by ``tests/test_fault.py``); the fault
+    subsystem in :mod:`repro.core.fault` compares the two to classify
+    each read as benign / corrected / detected / silent corruption.
+    """
+    return _replay_fault_jit(spec)(
+        state, fault,
+        *_as_ops(read_addrs, write_addrs, write_vals, write_mask))
+
+
+def replay_faulty_batched(spec: AMMSpec, states: FlatState,
+                          faults: FaultMask, read_addrs, write_addrs,
+                          write_vals, write_mask, share_trace: bool = True
+                          ) -> tuple[FlatState, ReplayResult]:
+    """``vmap``-batched :func:`replay_faulty`: axis 0 of ``states`` and
+    every ``faults`` array is the fault-instance axis, so a whole
+    campaign (F independent faults against one design + op stream)
+    runs in a single compiled call.  ``share_trace=True`` (the
+    campaign default) broadcasts one [T, ...] trace to all instances.
+    """
+    return _replay_fault_vmap(spec, share_trace)(
+        states, faults,
+        *_as_ops(read_addrs, write_addrs, write_vals, write_mask))
 
 
 def make_trace(spec: AMMSpec, n_cycles: int, seed: int = 0,

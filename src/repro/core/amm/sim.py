@@ -42,6 +42,7 @@ class AMMSim:
     step: Callable
     peek: Callable
     replay: Callable
+    replay_faulty: Callable
 
 
 def _make_replay(spec: AMMSpec) -> Callable:
@@ -54,6 +55,22 @@ def _make_replay(spec: AMMSpec) -> Callable:
     return run
 
 
+def _make_replay_faulty(spec: AMMSpec) -> Callable:
+    """Whole-trace fault-injected replay on the step-path (pytree) state.
+
+    ``fault`` is a :class:`repro.core.amm.replay.FaultMask` (lowered
+    from a :class:`repro.core.fault.FaultSpec`); zero masks reproduce
+    the clean replay bit-exactly.
+    """
+    def run(state, fault, read_addrs, write_addrs, write_vals, write_mask):
+        flat = _replay.flatten_state(spec, state)
+        flat, result = _replay.replay_faulty(
+            spec, flat, fault, read_addrs, write_addrs, write_vals,
+            write_mask)
+        return _replay.unflatten_state(spec, flat), result
+    return run
+
+
 def make_amm(spec: AMMSpec, values: jax.Array | None = None) -> AMMSim:
     if values is None:
         values = jnp.zeros((spec.depth,), jnp.uint32)
@@ -62,20 +79,21 @@ def make_amm(spec: AMMSpec, values: jax.Array | None = None) -> AMMSim:
         raise ValueError(f"init values must be [{spec.depth}]")
 
     run = _make_replay(spec)
+    run_faulty = _make_replay_faulty(spec)
     if spec.kind in ("h_ntx_rd", "b_ntx_wr", "hb_ntx"):
         state, fns = _ntx.make_ntx(spec, values)
         return AMMSim(spec, state, fns["read"], fns["read_parity"],
-                      fns["step"], fns["peek"], run)
+                      fns["step"], fns["peek"], run, run_faulty)
     if spec.kind == "lvt":
         state = _lvt.lvt_init(spec, values)
         return AMMSim(spec, state, _lvt.lvt_read, _lvt.lvt_read,
-                      _lvt.lvt_step, _lvt.lvt_peek, run)
+                      _lvt.lvt_step, _lvt.lvt_peek, run, run_faulty)
     if spec.kind == "remap":
         state = _lvt.remap_init(spec, values)
         return AMMSim(spec, state, _lvt.remap_read, _lvt.remap_read,
-                      _lvt.remap_step, _lvt.remap_peek, run)
+                      _lvt.remap_step, _lvt.remap_peek, run, run_faulty)
     if spec.kind in ("ideal", "banked", "multipump"):
         state = _banked.ideal_init(spec, values)
         return AMMSim(spec, state, _banked.ideal_read, _banked.ideal_read,
-                      _banked.ideal_step, _banked.ideal_peek, run)
+                      _banked.ideal_step, _banked.ideal_peek, run, run_faulty)
     raise ValueError(f"unknown design kind: {spec.kind}")

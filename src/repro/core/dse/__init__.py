@@ -1,14 +1,17 @@
 from repro.core.dse.pareto import (cost_at_time, design_space_expansion,
                                    pareto_front)
 from repro.core.dse.ratio import performance_ratio, spearman_rho
-from repro.core.dse.runner import BACKENDS, SweepCache, point_key, run_sweep
+from repro.core.dse.runner import (BACKENDS, SweepCache, kill_pool,
+                                   point_key, run_sweep, run_sweep_bench,
+                                   shutdown_pool)
 from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
                                   DesignPoint, DSEPoint, evaluate_point,
                                   sweep)
 
 __all__ = [
     "DesignPoint", "DSEPoint", "sweep", "evaluate_point",
-    "run_sweep", "SweepCache", "point_key", "BACKENDS",
+    "run_sweep", "run_sweep_bench", "SweepCache", "point_key", "BACKENDS",
+    "kill_pool", "shutdown_pool",
     "DEFAULT_DESIGNS", "DEFAULT_UNROLLS",
     "pareto_front", "cost_at_time", "design_space_expansion",
     "performance_ratio", "spearman_rho",

@@ -60,7 +60,11 @@ from repro.core.dse.sweep import (DEFAULT_DESIGNS, DEFAULT_UNROLLS,
 # backend-independent — the three cycle loops are pinned decision-for-
 # decision equal — but pre-v3 entries predate the conformance harness
 # that enforces it, so they must re-evaluate once.
-CACHE_VERSION = 3
+# v4: checksummed entry envelope ({"sha256", "point"}) + DSEPoint res_*
+# resilience fields.  Entries stay fault-agnostic: campaigns are
+# attached after cache load, so the same entry serves faulted and
+# fault-free sweeps.
+CACHE_VERSION = 4
 
 BACKENDS = ("auto", "c", "py", "jax")
 
@@ -91,8 +95,11 @@ def point_key(fingerprint: str, dp: DesignPoint, unroll: int,
 class SweepCache:
     """One-JSON-file-per-point result cache under ``root``.
 
-    Writes are atomic (tmp file + rename) so concurrent workers and
-    interrupted sweeps never leave a torn entry behind.
+    Writes are atomic (tmp file + fsync + rename) so concurrent workers
+    and interrupted sweeps never leave a torn entry behind, and every
+    entry carries a sha256 of its payload: an entry corrupted *after*
+    landing on disk (bit rot, partial copy, hand edits) fails the
+    checksum and reads as a miss instead of deserializing garbage.
     """
 
     def __init__(self, root: "str | Path") -> None:
@@ -106,6 +113,13 @@ class SweepCache:
     def _path(self, key: str) -> "Path":
         return self.root / f"{key[:2]}" / f"{key}.json"
 
+    @staticmethod
+    def _digest(point_dict: dict) -> str:
+        import json
+
+        payload = json.dumps(point_dict, sort_keys=True)
+        return hashlib.sha256(payload.encode()).hexdigest()
+
     def get(self, key: str) -> "DSEPoint | None":
         import json
 
@@ -113,21 +127,26 @@ class SweepCache:
         try:
             with open(p) as f:
                 d = json.load(f)
-            pt = DSEPoint(**d)
+            if d["sha256"] != self._digest(d["point"]):
+                raise ValueError("cache entry checksum mismatch")
+            pt = DSEPoint(**d["point"])
             self.hits += 1
             return pt
-        except (OSError, ValueError, TypeError):
+        except (OSError, ValueError, TypeError, KeyError):
             self.misses += 1
             return None
 
     def put(self, key: str, point: DSEPoint) -> None:
         import json
 
+        d = dataclasses.asdict(point)
         p = self._path(key)
         p.parent.mkdir(parents=True, exist_ok=True)
         tmp = p.with_suffix(f".tmp.{os.getpid()}")
         with open(tmp, "w") as f:
-            json.dump(dataclasses.asdict(point), f)
+            json.dump({"sha256": self._digest(d), "point": d}, f)
+            f.flush()
+            os.fsync(f.fileno())
         os.replace(tmp, p)
 
     # -- bench-identity -> trace-fingerprint manifest ------------------
@@ -228,6 +247,10 @@ def _get_pool(jobs: int) -> "ProcessPoolExecutor":
     from concurrent.futures import ProcessPoolExecutor
 
     global _POOL, _POOL_WORKERS, _ATEXIT_REGISTERED
+    if _POOL is not None and getattr(_POOL, "_broken", False):
+        # a worker died (OOM kill, segfault, os._exit): the executor is
+        # permanently unusable — replace it with a fresh one
+        kill_pool()
     if _POOL is None or _POOL_WORKERS < jobs:
         if _POOL is not None:
             # drain the old pool before replacing it: shutdown(wait=False)
@@ -241,11 +264,38 @@ def _get_pool(jobs: int) -> "ProcessPoolExecutor":
     return _POOL
 
 
+def _kill_executor(pool: "ProcessPoolExecutor") -> None:
+    """Forcibly tear down an executor whose workers may be hung or dead.
+
+    ``shutdown(wait=True)`` would block forever on a hung worker, so
+    terminate the processes first, then release the executor's threads
+    without waiting.
+    """
+    for proc in list(getattr(pool, "_processes", {}).values()):
+        try:
+            proc.terminate()
+        except (OSError, ValueError):
+            pass  # already dead
+    pool.shutdown(wait=False, cancel_futures=True)
+
+
+def kill_pool() -> None:
+    """Forcibly tear down the shared pool (broken/hung workers)."""
+    global _POOL, _POOL_WORKERS
+    if _POOL is not None:
+        _kill_executor(_POOL)
+        _POOL = None
+        _POOL_WORKERS = 0
+
+
 def shutdown_pool() -> None:
     """Tear down the shared worker pool (tests / atexit hygiene)."""
     global _POOL, _POOL_WORKERS
     if _POOL is not None:
-        _POOL.shutdown(wait=True)
+        if getattr(_POOL, "_broken", False):
+            _kill_executor(_POOL)
+        else:
+            _POOL.shutdown(wait=True)
         _POOL = None
         _POOL_WORKERS = 0
 
@@ -258,6 +308,25 @@ def _chunked(tasks: list, n_chunks: int) -> list[list]:
 # ----------------------------------------------------------------------
 # entry point
 # ----------------------------------------------------------------------
+def _attach_faults(points: list, designs: Sequence[DesignPoint],
+                   faults) -> list:
+    """Fill ``res_*`` fields from per-design fault campaigns.
+
+    ``faults`` is a :class:`repro.core.fault.FaultConfig`, an int
+    (fault-population size with default config), or None (no-op).
+    Campaigns run at the canonical 256x32b geometry and are memoised
+    per design, so this costs one campaign per distinct design label
+    per process regardless of benches/unrolls.
+    """
+    if faults is None:
+        return points
+    from repro.core.fault import FaultConfig, attach_resilience
+
+    if isinstance(faults, int):
+        faults = FaultConfig(n_faults=faults)
+    return attach_resilience(points, designs, cfg=faults)
+
+
 def _vlog(verbose: bool, msg: str) -> None:
     if verbose:
         import sys
@@ -333,6 +402,110 @@ def _run_pruned(
     return [results[i] for i in sorted(results)]
 
 
+def _run_pooled(
+    pt: PreparedTrace,
+    chunks: "list[list[tuple[int, DesignPoint, int]]]",
+    mem_latency: int,
+    backend: str,
+    results: "list[DSEPoint | None]",
+    *,
+    n_jobs: int,
+    dedicated: bool,
+    chunk_timeout: "float | None",
+    chunk_retries: int,
+    verbose: bool,
+    done: int,
+    total: int,
+) -> None:
+    """Dispatch ``chunks`` to worker processes with bounded self-repair.
+
+    Failure handling (the chaos-test contract):
+
+    * a chunk that raises a *real* exception propagates — worker bugs
+      must not be silently retried;
+    * a worker crash (``BrokenProcessPool``) or a chunk exceeding
+      ``chunk_timeout`` marks the pool dead: it is forcibly torn down,
+      a fresh pool is built after an exponential backoff, and every
+      chunk whose result was not yet harvested is re-dispatched;
+    * after ``chunk_retries`` failed rounds the surviving chunks are
+      evaluated serially in-process — a sweep never returns partial
+      results because of infrastructure failures.
+
+    Results are written into ``results`` by grid index, so retries and
+    the serial fallback are bitwise-invisible in the output.
+    """
+    from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
+                                    TimeoutError as _FutTimeout)
+
+    bare = _bare_trace(pt.trace)
+    tr_arg = None if dedicated else bare
+    pending = chunks
+    attempt = 0
+    t0 = time.perf_counter()
+    while pending:
+        if dedicated:
+            # ship the trace once per worker via the pool initializer
+            pool = ProcessPoolExecutor(
+                max_workers=n_jobs, initializer=_worker_init,
+                initargs=(pt.fingerprint, bare))
+        else:
+            pool = _get_pool(n_jobs)
+        futs = [(pool.submit(_worker_eval_chunk, pt.fingerprint, tr_arg,
+                             c, mem_latency, backend), c) for c in pending]
+        survivors: list = []
+        broken = False
+        for fut, chunk in futs:
+            if broken:
+                # the pool is already condemned: harvest chunks that did
+                # finish, requeue the rest without waiting on them
+                if fut.done() and fut.exception() is None:
+                    for idx, point in fut.result():
+                        results[idx] = point
+                    done += len(chunk)
+                else:
+                    survivors.append(chunk)
+                continue
+            try:
+                rows = fut.result(timeout=chunk_timeout)
+            except (BrokenExecutor, _FutTimeout) as e:
+                broken = True
+                survivors.append(chunk)
+                _vlog(verbose,
+                      f"{pt.trace.name}: pool failure "
+                      f"({type(e).__name__}) on a chunk of {len(chunk)}; "
+                      f"attempt {attempt + 1}/{chunk_retries + 1}")
+                continue
+            for idx, point in rows:
+                results[idx] = point
+            done += len(chunk)
+            _vlog(verbose,
+                  f"{pt.trace.name}: chunk of {len(chunk)} done "
+                  f"({done}/{total}) at {time.perf_counter() - t0:.3f}s")
+        if broken:
+            if dedicated:
+                _kill_executor(pool)
+            else:
+                kill_pool()
+        elif dedicated:
+            pool.shutdown(wait=True)
+        if not survivors:
+            return
+        attempt += 1
+        if attempt > chunk_retries:
+            _vlog(verbose,
+                  f"{pt.trace.name}: {chunk_retries} pool retries "
+                  f"exhausted; evaluating {sum(map(len, survivors))} "
+                  "remaining points serially")
+            for chunk in survivors:
+                for idx, dp, u in chunk:
+                    results[idx] = evaluate_point(pt, dp, u, mem_latency,
+                                                  backend=backend)
+                done += len(chunk)
+            return
+        time.sleep(min(1.0, 0.05 * 2 ** attempt))
+        pending = survivors
+
+
 def _run_batched_jax(
     pt: PreparedTrace,
     tasks: "list[tuple[int, DesignPoint, int]]",
@@ -370,6 +543,9 @@ def run_sweep(
     backend: str = "auto",
     prune: "str | None" = None,
     margin: "float | None" = None,
+    faults=None,
+    chunk_timeout: "float | None" = None,
+    chunk_retries: int = 2,
     verbose: bool = False,
 ) -> list[DSEPoint]:
     """Evaluate every ``(design, unroll)`` composition on one trace.
@@ -404,6 +580,17 @@ def run_sweep(
         and ``backend``.
       margin: safety slack on predicted time for the surrogate band
         (default :data:`repro.core.dse.surrogate.DEFAULT_MARGIN`).
+      faults: a :class:`repro.core.fault.FaultConfig` (or fault count
+        int) to run a seeded fault campaign per distinct design and
+        fill each point's ``res_*`` fields.  Campaigns run at a
+        canonical 256x32b geometry — resilience is a property of the
+        design, not the workload — and are attached *after* cache
+        load/store, so cache entries stay fault-agnostic.
+      chunk_timeout: seconds to wait for one pooled chunk before the
+        pool is declared hung, torn down and the chunk re-dispatched
+        (``None`` = wait forever).
+      chunk_retries: pool rebuild attempts (crash or timeout) before
+        the remaining chunks fall back to serial in-process evaluation.
       verbose: per-chunk progress lines on stderr (points done/total,
         cache hits, chunk wall-clock).
     """
@@ -421,8 +608,9 @@ def run_sweep(
         from repro.core.dse.surrogate import CALIBRATED_MEM_LATENCY
 
         if mem_latency == CALIBRATED_MEM_LATENCY:
-            return _run_pruned(pt, designs, unrolls, mem_latency, cache,
-                               margin, verbose)
+            return _attach_faults(
+                _run_pruned(pt, designs, unrolls, mem_latency, cache,
+                            margin, verbose), designs, faults)
         _vlog(verbose,
               f"{pt.trace.name}: surrogate calibrated at mem_latency="
               f"{CALIBRATED_MEM_LATENCY}, got {mem_latency}: "
@@ -455,38 +643,12 @@ def run_sweep(
             and len(tasks) * pt.n_nodes >= _MIN_PARALLEL_WORK):
         n_jobs = min(n_jobs, len(tasks))
         chunks = _chunked(tasks, n_jobs * 2)
-        bare = _bare_trace(pt.trace)
-        if pt.n_nodes >= _LARGE_TRACE_NODES:
-            # ship the trace once per worker via the pool initializer
-            from concurrent.futures import ProcessPoolExecutor
-
-            with ProcessPoolExecutor(
-                    max_workers=n_jobs, initializer=_worker_init,
-                    initargs=(pt.fingerprint, bare)) as pool:
-                futs = [pool.submit(_worker_eval_chunk, pt.fingerprint,
-                                    None, c, mem_latency, backend)
-                        for c in chunks]
-                t0 = time.perf_counter()
-                for fut, chunk in zip(futs, chunks):
-                    for idx, point in fut.result():
-                        results[idx] = point
-                    done += len(chunk)
-                    _vlog(verbose,
-                          f"{pt.trace.name}: chunk of {len(chunk)} done "
-                          f"({done}/{total}) at "
-                          f"{time.perf_counter() - t0:.3f}s")
-        else:
-            pool = _get_pool(n_jobs)
-            futs = [pool.submit(_worker_eval_chunk, pt.fingerprint, bare,
-                                c, mem_latency, backend) for c in chunks]
-            t0 = time.perf_counter()
-            for fut, chunk in zip(futs, chunks):
-                for idx, point in fut.result():
-                    results[idx] = point
-                done += len(chunk)
-                _vlog(verbose,
-                      f"{pt.trace.name}: chunk of {len(chunk)} done "
-                      f"({done}/{total}) at {time.perf_counter() - t0:.3f}s")
+        _run_pooled(pt, chunks, mem_latency, backend, results,
+                    n_jobs=n_jobs,
+                    dedicated=pt.n_nodes >= _LARGE_TRACE_NODES,
+                    chunk_timeout=chunk_timeout,
+                    chunk_retries=chunk_retries,
+                    verbose=verbose, done=done, total=total)
     else:
         for chunk in _chunked(tasks, max(1, (len(tasks) + 15) // 16)):
             t0 = time.perf_counter()
@@ -503,7 +665,7 @@ def run_sweep(
             cache.put(keys[idx], results[idx])
 
     assert all(p is not None for p in results)
-    return results  # type: ignore[return-value]
+    return _attach_faults(results, designs, faults)  # type: ignore
 
 
 def run_sweep_bench(
@@ -520,6 +682,9 @@ def run_sweep_bench(
     backend: str = "auto",
     prune: "str | None" = None,
     margin: "float | None" = None,
+    faults=None,
+    chunk_timeout: "float | None" = None,
+    chunk_retries: int = 2,
     verbose: bool = False,
     stats: "dict | None" = None,
 ) -> list[DSEPoint]:
@@ -563,7 +728,7 @@ def run_sweep_bench(
                                "points), trace generation skipped")
                 if stats is not None:
                     stats["fast_path"] = True
-                return hits
+                return _attach_faults(hits, designs, faults)
 
     tr = bench_mod.get_trace(bench, params, full=full)
     pt = prepare_trace(tr)
@@ -572,7 +737,9 @@ def run_sweep_bench(
         stats["prepared"] = pt
     res = run_sweep(pt, designs, unrolls, mem_latency=mem_latency,
                     jobs=jobs, cache=cache, backend=backend, prune=prune,
-                    margin=margin, verbose=verbose)
+                    margin=margin, faults=faults,
+                    chunk_timeout=chunk_timeout,
+                    chunk_retries=chunk_retries, verbose=verbose)
     if cache is not None:
         cache.manifest_put(bkey, pt.fingerprint)
     return res
@@ -616,6 +783,19 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     ap.add_argument("--margin", type=float, default=None,
                     help="surrogate band safety margin on predicted time "
                          "(default: surrogate.DEFAULT_MARGIN)")
+    ap.add_argument("--faults", type=int, default=0, metavar="N",
+                    help="inject an N-fault seeded campaign per design "
+                         "and emit the res_* resilience columns (0 = off)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="campaign RNG seed (with --faults)")
+    ap.add_argument("--fault-cycles", type=int, default=128,
+                    help="campaign trace length in cycles (with --faults)")
+    ap.add_argument("--chunk-timeout", type=float, default=None,
+                    metavar="SEC",
+                    help="per-chunk worker timeout before the pool is "
+                         "torn down and the chunk re-dispatched")
+    ap.add_argument("--chunk-retries", type=int, default=2,
+                    help="pool rebuilds before serial fallback")
     ap.add_argument("--front-only", action="store_true",
                     help="emit only Pareto-front rows (grid order kept); "
                          "pruned and exhaustive sweeps agree on this "
@@ -625,14 +805,22 @@ def main(argv: "Sequence[str] | None" = None) -> None:
     args = ap.parse_args(argv)
 
     cache = _resolve_cache(args.cache_dir)
+    faults = None
+    if args.faults > 0:
+        from repro.core.fault import FaultConfig
+
+        faults = FaultConfig(n_faults=args.faults, seed=args.fault_seed,
+                             n_cycles=args.fault_cycles)
     stats: dict = {}
     t0 = time.perf_counter()
     pts = run_sweep_bench(args.bench, DEFAULT_DESIGNS, args.unrolls,
                           full=args.full, mem_latency=args.mem_latency,
                           jobs=args.jobs, cache=cache,
                           backend=args.backend, prune=args.prune,
-                          margin=args.margin, verbose=args.verbose,
-                          stats=stats)
+                          margin=args.margin, faults=faults,
+                          chunk_timeout=args.chunk_timeout,
+                          chunk_retries=args.chunk_retries,
+                          verbose=args.verbose, stats=stats)
     t_sweep = time.perf_counter() - t0
 
     emit = pts

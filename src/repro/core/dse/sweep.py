@@ -102,6 +102,15 @@ class DSEPoint:
     parity_fanout_stalls: int
     write_pair_stalls: int
     avg_mem_parallelism: float
+    # resilience record from a seeded fault campaign on this point's
+    # design (repro.core.fault; attached by run_sweep(faults=...)).
+    # Sentinels ("-" / -1.0, not NaN: NaN breaks dataclass equality)
+    # mean no campaign was attached.
+    res_cover: str = "-"
+    res_sdc_rate: float = -1.0
+    res_corrected: float = -1.0
+    res_detected: float = -1.0
+    res_latency: float = -1.0
 
     @property
     def total_stalls(self) -> int:

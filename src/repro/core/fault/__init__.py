@@ -1,0 +1,31 @@
+"""Fault-injection & resilience layer (PR 7).
+
+The paper's algorithmic multi-port memories buy extra ports with
+*redundant storage* — NTX parity planes, LVT bank replicas.  This
+package asks the follow-on question: how much fault tolerance does that
+same redundancy buy for free?  It injects seeded transient bit-flips,
+stuck-at bits and whole-bank failures into the flat replay state of
+every design kind, then classifies each post-injection read as
+benign / corrected / detected / SDC using only the design's own
+read-path redundancy (:mod:`repro.core.fault.campaign`).
+
+The resulting :class:`Resilience` record rides along the DSE sweep
+(``DSEPoint.res_*`` fields, runner CSV, ``--faults`` CLI axis) and the
+``fault_campaign`` benchmark table.
+"""
+from repro.core.fault.campaign import (CampaignResult, FaultConfig,
+                                       attach_resilience, design_resilience,
+                                       run_campaign)
+from repro.core.fault.metrics import (COVER, RES_FIELDS, Resilience,
+                                      resilience_fields)
+from repro.core.fault.model import (FAULT_KINDS, FaultSpec, build_masks,
+                                    sample_faults, state_geometry,
+                                    tile_states)
+
+__all__ = [
+    "FAULT_KINDS", "FaultSpec", "state_geometry", "sample_faults",
+    "build_masks", "tile_states",
+    "COVER", "RES_FIELDS", "Resilience", "resilience_fields",
+    "FaultConfig", "CampaignResult", "run_campaign", "design_resilience",
+    "attach_resilience",
+]

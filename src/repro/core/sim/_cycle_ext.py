@@ -85,10 +85,21 @@ def load():
         _FN = fn
         _ANALYZE = an
         _BATCH = bt
-    except Exception:
+    except Exception as e:
         _FN = None
         _ANALYZE = None
         _BATCH = None
+        # degrade loudly, exactly once per process (the _TRIED latch):
+        # results are identical on the pure-Python loop, but silently
+        # losing the C backend turns a seconds sweep into minutes
+        import warnings
+
+        warnings.warn(
+            f"repro C cycle-loop extension unavailable "
+            f"({type(e).__name__}: {e}); falling back to the pure-Python "
+            "scheduler. Results are identical but large sweeps will be "
+            "slower. Set REPRO_PURE_PY=1 to silence this warning.",
+            RuntimeWarning, stacklevel=2)
     return _FN
 
 

@@ -1,0 +1,256 @@
+"""Chaos harness: the DSE runner must survive infrastructure failures
+with bitwise-identical results.
+
+Failure legs (ISSUE 7 tentpole):
+
+* a worker process crashing mid-sweep (``os._exit`` inside a chunk) —
+  the broken pool is torn down, rebuilt, and the lost chunks
+  re-dispatched;
+* a worker hanging past ``chunk_timeout`` — the pool is killed and the
+  chunk re-run on a fresh pool;
+* torn / corrupted cache entries (truncated JSON, checksum mismatch) —
+  read as misses and rewritten, never deserialized;
+* a broken shared pool being transparently replaced on next use;
+* a broken ``CC`` — the C extension degrades to the pure-Python loop
+  with exactly one warning and golden-identical schedules.
+
+The crash/hang injectors are module-level functions: worker processes
+are forked (Linux default), so they inherit the monkeypatched runner
+module, and the submitted function is pickled by qualified name —
+which must resolve in the child.  A sentinel file consumed with an
+atomic ``os.unlink`` makes each injected failure fire exactly once
+even with several workers racing.
+"""
+import json
+import os
+import time
+import warnings
+
+import pytest
+
+from repro.core.bench import get_trace
+from repro.core.dse import DesignPoint, run_sweep
+from repro.core.dse import runner as runner_mod
+from repro.core.dse.pareto import pareto_front
+from repro.core.dse.runner import SweepCache, point_key, shutdown_pool
+from repro.core.sim import prepare_trace
+
+DESIGNS = [DesignPoint("banked", n_banks=4), DesignPoint("lvt", 2, 2),
+           DesignPoint("h_ntx_rd", 2, 1), DesignPoint("multipump", 2, 2)]
+UNROLLS = (1, 4)
+
+_FLAG_ENV = "REPRO_CHAOS_FLAG"
+_ORIG_EVAL = runner_mod._worker_eval_chunk
+
+
+def _consume_flag() -> bool:
+    """Atomically claim the one-shot chaos trigger (fork-safe)."""
+    flag = os.environ.get(_FLAG_ENV)
+    if not flag:
+        return False
+    try:
+        os.unlink(flag)
+    except FileNotFoundError:
+        return False
+    return True
+
+
+def _crashy_eval_chunk(fingerprint, tr, chunk, mem_latency, backend="auto"):
+    if _consume_flag():
+        os._exit(1)                 # simulated OOM-kill / segfault
+    return _ORIG_EVAL(fingerprint, tr, chunk, mem_latency, backend)
+
+
+def _hanging_eval_chunk(fingerprint, tr, chunk, mem_latency, backend="auto"):
+    if _consume_flag():
+        time.sleep(600)             # simulated wedged worker
+    return _ORIG_EVAL(fingerprint, tr, chunk, mem_latency, backend)
+
+
+@pytest.fixture()
+def pt():
+    return prepare_trace(get_trace("gemm_ncubed"))
+
+
+@pytest.fixture()
+def chaos_flag(tmp_path, monkeypatch):
+    """Arm the one-shot failure trigger before any pool exists, so the
+    forked workers inherit the env var."""
+    shutdown_pool()
+    flag = tmp_path / "chaos.flag"
+    flag.write_text("armed")
+    monkeypatch.setenv(_FLAG_ENV, str(flag))
+    yield flag
+    shutdown_pool()
+
+
+def _front(points):
+    return [(p.design, p.unroll, p.cycles, p.time_us, p.area_mm2)
+            for p in pareto_front(points)]
+
+
+# ----------------------------------------------------------------------
+# worker crash / hang
+# ----------------------------------------------------------------------
+def test_worker_crash_mid_sweep_recovers(pt, monkeypatch, chaos_flag):
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    monkeypatch.setattr(runner_mod, "_worker_eval_chunk", _crashy_eval_chunk)
+    serial = run_sweep(pt, DESIGNS, UNROLLS, jobs=1)
+    chaotic = run_sweep(pt, DESIGNS, UNROLLS, jobs=2)
+    assert not chaos_flag.exists(), "the injected crash never fired"
+    assert chaotic == serial
+    assert _front(chaotic) == _front(serial)
+
+
+def test_worker_crash_in_dedicated_pool_recovers(pt, monkeypatch, chaos_flag):
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    monkeypatch.setattr(runner_mod, "_LARGE_TRACE_NODES", 0)
+    monkeypatch.setattr(runner_mod, "_worker_eval_chunk", _crashy_eval_chunk)
+    serial = run_sweep(pt, DESIGNS, UNROLLS, jobs=1)
+    chaotic = run_sweep(pt, DESIGNS, UNROLLS, jobs=2)
+    assert not chaos_flag.exists()
+    assert chaotic == serial
+
+
+def test_worker_hang_hits_timeout_and_recovers(pt, monkeypatch, chaos_flag):
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    monkeypatch.setattr(runner_mod, "_worker_eval_chunk", _hanging_eval_chunk)
+    serial = run_sweep(pt, DESIGNS, UNROLLS, jobs=1)
+    t0 = time.monotonic()
+    chaotic = run_sweep(pt, DESIGNS, UNROLLS, jobs=2, chunk_timeout=3.0)
+    assert time.monotonic() - t0 < 120, "timeout did not interrupt the hang"
+    assert not chaos_flag.exists()
+    assert chaotic == serial
+    assert _front(chaotic) == _front(serial)
+
+
+def _always_crash_eval_chunk(fingerprint, tr, chunk, mem_latency,
+                             backend="auto"):
+    os._exit(1)
+
+
+def test_retries_exhausted_falls_back_to_serial(pt, monkeypatch):
+    """With a permanently-crashing worker path, chunk_retries=0 must
+    finish the sweep in-process rather than loop or return partials."""
+    monkeypatch.setattr(runner_mod, "_worker_eval_chunk",
+                        _always_crash_eval_chunk)
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    shutdown_pool()
+    serial = run_sweep(pt, DESIGNS[:2], (1,), jobs=1)
+    chaotic = run_sweep(pt, DESIGNS[:2], (1,), jobs=2, chunk_retries=0)
+    assert chaotic == serial
+    shutdown_pool()
+
+
+# ----------------------------------------------------------------------
+# broken shared pool
+# ----------------------------------------------------------------------
+def test_broken_pool_is_replaced_on_next_use():
+    from concurrent.futures.process import BrokenProcessPool
+
+    shutdown_pool()
+    pool = runner_mod._get_pool(2)
+    with pytest.raises(BrokenProcessPool):
+        pool.submit(os._exit, 1).result()
+    assert getattr(pool, "_broken", False)
+    pool2 = runner_mod._get_pool(2)
+    assert pool2 is not pool
+    assert pool2.submit(len, (1, 2, 3)).result() == 3
+    shutdown_pool()
+
+
+def test_sweep_succeeds_after_pool_breakage(pt, monkeypatch):
+    from concurrent.futures.process import BrokenProcessPool
+
+    monkeypatch.setattr(runner_mod, "_MIN_PARALLEL_WORK", 0)
+    shutdown_pool()
+    pool = runner_mod._get_pool(2)
+    with pytest.raises(BrokenProcessPool):
+        pool.submit(os._exit, 1).result()
+    serial = run_sweep(pt, DESIGNS[:2], (1,), jobs=1)
+    assert run_sweep(pt, DESIGNS[:2], (1,), jobs=2) == serial
+    shutdown_pool()
+
+
+# ----------------------------------------------------------------------
+# torn / corrupted cache entries
+# ----------------------------------------------------------------------
+def test_torn_cache_write_reads_as_miss(tmp_path, pt):
+    cache = SweepCache(tmp_path)
+    pts1 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache)
+    key = point_key(pt.fingerprint, DESIGNS[0], 1, 2)
+    path = cache._path(key)
+    full = path.read_text()
+    path.write_text(full[:len(full) // 2])          # torn mid-write copy
+    cache2 = SweepCache(tmp_path)
+    pts2 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache2)
+    assert cache2.misses == 1 and pts2 == pts1
+    assert json.loads(path.read_text())["point"]["cycles"] == pts1[0].cycles
+
+
+def test_checksum_mismatch_reads_as_miss(tmp_path, pt):
+    """A well-formed entry whose payload was tampered with post-write
+    (bit rot, hand edit) must fail the sha256, not deserialize."""
+    cache = SweepCache(tmp_path)
+    pts1 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache)
+    key = point_key(pt.fingerprint, DESIGNS[0], 1, 2)
+    path = cache._path(key)
+    d = json.loads(path.read_text())
+    d["point"]["cycles"] += 1                        # silent corruption
+    path.write_text(json.dumps(d))
+    cache2 = SweepCache(tmp_path)
+    assert cache2.get(key) is None and cache2.misses == 1
+    pts2 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache2)
+    assert pts2 == pts1
+    # entry healed: valid checksum and the true cycle count
+    healed = json.loads(path.read_text())
+    assert healed["sha256"] == SweepCache._digest(healed["point"])
+    assert healed["point"]["cycles"] == pts1[0].cycles
+
+
+def test_legacy_unchecksummed_entry_reads_as_miss(tmp_path, pt):
+    """Pre-v4 bare-dict entries (no envelope) must miss cleanly."""
+    cache = SweepCache(tmp_path)
+    pts1 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache)
+    key = point_key(pt.fingerprint, DESIGNS[0], 1, 2)
+    path = cache._path(key)
+    path.write_text(json.dumps(json.loads(path.read_text())["point"]))
+    cache2 = SweepCache(tmp_path)
+    assert cache2.get(key) is None
+    assert run_sweep(pt, DESIGNS[:1], (1,), cache=cache2) == pts1
+
+
+# ----------------------------------------------------------------------
+# broken C toolchain
+# ----------------------------------------------------------------------
+def test_broken_cc_degrades_once_with_golden_results(tmp_path, monkeypatch):
+    """CC=/bin/false: the extension must fail to build, warn exactly
+    once, and the auto backend must still reproduce pinned golden
+    schedules through the pure-Python loop."""
+    import pathlib
+
+    import repro.core.sim._cycle_ext as ext
+    from test_golden_schedule import GOLDEN, _check, _config
+
+    monkeypatch.setenv("CC", "/bin/false")
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "ccache"))
+    monkeypatch.delenv("REPRO_PURE_PY", raising=False)
+    monkeypatch.setattr(ext, "_TRIED", False)
+    monkeypatch.setattr(ext, "_FN", None)
+    monkeypatch.setattr(ext, "_ANALYZE", None)
+    monkeypatch.setattr(ext, "_BATCH", None)
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert ext.load() is None
+        assert ext.load() is None           # latched: no second attempt
+        assert ext.load_batch() is None
+    relevant = [w for w in caught if "cycle-loop extension" in str(w.message)]
+    assert len(relevant) == 1
+    assert issubclass(relevant[0].category, RuntimeWarning)
+    assert not list(pathlib.Path(tmp_path / "ccache").glob("*.so"))
+
+    from repro.core.sim.scheduler import schedule
+    for g in GOLDEN[:6]:
+        pt = prepare_trace(get_trace(g["bench"]))
+        _check(schedule(pt, _config(pt, g["design"], g["unroll"])), g)

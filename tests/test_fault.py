@@ -1,0 +1,234 @@
+"""Fault-injection layer: replay hook semantics, per-cover
+classification, and the pinned golden campaigns.
+
+The campaign goldens (tests/golden_faults.json) pin one seeded
+campaign per design kind; regenerate deliberately with
+``python tools/gen_fault_golden.py`` after any intentional change to
+the fault model, the replay hook or the classifier.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.amm import replay as rp
+from repro.core.amm.replay import zero_fault
+from repro.core.amm.spec import AMMSpec
+from repro.core.fault import (COVER, FaultConfig, FaultSpec, build_masks,
+                              run_campaign, sample_faults, state_geometry,
+                              tile_states)
+
+GOLDEN = json.loads(
+    (pathlib.Path(__file__).parent / "golden_faults.json").read_text())
+
+SPECS = [
+    AMMSpec("ideal", 2, 2, 32, 32),
+    AMMSpec("banked", 4, 4, 32, 32, n_banks=2),
+    AMMSpec("multipump", 2, 2, 32, 32),
+    AMMSpec("h_ntx_rd", 4, 1, 64, 32),
+    AMMSpec("b_ntx_wr", 1, 2, 32, 32),
+    AMMSpec("hb_ntx", 4, 2, 64, 32),
+    AMMSpec("lvt", 2, 2, 32, 32),
+    AMMSpec("lvt", 4, 2, 32, 32),
+    AMMSpec("remap", 2, 2, 32, 32),
+]
+
+
+def _trace_and_init(spec, n_cycles, seed=11, write_prob=0.5):
+    rng = np.random.default_rng(seed)
+    ops = rp.make_trace(spec, n_cycles, rng=rng, write_prob=write_prob)
+    vals = rng.integers(0, 1 << 32, spec.depth, dtype=np.uint32)
+    return ops, vals
+
+
+# ----------------------------------------------------------------------
+# replay hook semantics
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_zero_fault_replay_is_bit_exact(spec):
+    ops, vals = _trace_and_init(spec, 48)
+    st_c, clean = rp.replay(spec, rp.init_flat(spec, vals), *ops)
+    st_f, faulty = rp.replay_faulty(spec, rp.init_flat(spec, vals),
+                                    zero_fault(spec), *ops)
+    assert (np.asarray(clean.read_vals) == np.asarray(faulty.read_vals)).all()
+    assert (np.asarray(clean.parity_vals)
+            == np.asarray(faulty.parity_vals)).all()
+    for k in st_c:
+        assert (np.asarray(st_c[k]) == np.asarray(st_f[k])).all()
+
+
+@pytest.mark.parametrize("spec", SPECS[:4], ids=lambda s: s.describe())
+def test_batched_fault_replay_matches_solo(spec):
+    ops, vals = _trace_and_init(spec, 40)
+    faults = sample_faults(spec, 6, seed=3, n_cycles=40)
+    masks = build_masks(spec, faults)
+    states = tile_states(spec, vals, len(faults))
+    _, batched = rp.replay_faulty_batched(spec, states, masks, *ops,
+                                          share_trace=True)
+    import jax
+    for i in range(len(faults)):
+        one = jax.tree.map(lambda a: a[i], masks)
+        _, solo = rp.replay_faulty(spec, rp.init_flat(spec, vals), one, *ops)
+        assert (np.asarray(batched.read_vals[i])
+                == np.asarray(solo.read_vals)).all()
+
+
+def test_transient_flip_heals_on_overwrite():
+    """A bit_flip is live until the word is overwritten, then gone."""
+    spec = AMMSpec("ideal", 1, 1, 8, 32)
+    T = 6
+    ra = np.zeros((T, 1), np.int32)             # read addr 0 every cycle
+    wa = np.zeros((T, 1), np.int32)
+    wv = np.full((T, 1), 0xABCD, np.uint32)
+    wm = np.zeros((T, 1), bool)
+    wm[3, 0] = True                             # overwrite at cycle 3
+    vals = np.arange(8, dtype=np.uint32) + 100
+    masks = build_masks(spec, [FaultSpec("bit_flip", "mem", 0, 0, 4, 0, 1)])
+    states = tile_states(spec, vals, 1)
+    _, res = rp.replay_faulty_batched(spec, states, masks,
+                                      ra, wa, wv, wm, share_trace=True)
+    got = np.asarray(res.read_vals)[0, :, 0]
+    assert got[0] == 100                        # before injection
+    assert got[1] == got[2] == 100 ^ (1 << 4)   # corrupted
+    assert (got[4:] == 0xABCD).all()            # healed by the write
+
+
+def test_stuck_at_defeats_writes():
+    """A stuck bit stays stuck through overwrites."""
+    spec = AMMSpec("ideal", 1, 1, 8, 32)
+    T = 4
+    ra = np.zeros((T, 1), np.int32)
+    wa = np.zeros((T, 1), np.int32)
+    wv = np.full((T, 1), 0xFFFF, np.uint32)
+    wm = np.zeros((T, 1), bool)
+    wm[1, 0] = True
+    masks = build_masks(
+        spec, [FaultSpec("stuck_at", "mem", 0, 0, 0, 0, 0)])  # bit0 stuck@0
+    states = tile_states(spec, np.full(8, 0xFFFF, np.uint32), 1)
+    _, res = rp.replay_faulty_batched(spec, states, masks,
+                                      ra, wa, wv, wm, share_trace=True)
+    got = np.asarray(res.read_vals)[0, :, 0]
+    assert (got == 0xFFFE).all()                # bit0 forced low forever
+
+
+def test_h_ntx_leaf_loss_is_fully_correctable():
+    """Erasing any single leaf never takes out both read paths: for
+    every read at least one path still returns the golden word (the
+    parity path never contains the direct leaf)."""
+    spec = AMMSpec("h_ntx_rd", 4, 1, 64, 32)
+    n_leaves = state_geometry(spec)["banks"][0]
+    faults = [FaultSpec("bank_loss", "banks", b, 0, 0, 0, 0)
+              for b in range(n_leaves)]
+    ops, vals = _trace_and_init(spec, 32, write_prob=0.0)
+    _, g = rp.replay(spec, rp.init_flat(spec, vals), *ops)
+    _, res = rp.replay_faulty_batched(
+        spec, tile_states(spec, vals, n_leaves), build_masks(spec, faults),
+        *ops, share_trace=True)
+    gv = np.asarray(g.read_vals)[None]
+    fv, fp = np.asarray(res.read_vals), np.asarray(res.parity_vals)
+    assert (fv != gv).any(), "campaign must actually corrupt some reads"
+    assert ((fv == gv) | (fp == gv)).all()
+
+
+# ----------------------------------------------------------------------
+# classification per cover
+# ----------------------------------------------------------------------
+def test_cover_map_is_total():
+    from repro.core.amm.spec import AMM_KINDS
+    baselines = {"ideal", "banked", "multipump"}
+    assert set(COVER) == set(AMM_KINDS) | baselines
+
+
+def test_lvt_majority_vote_vs_detect_only():
+    cfg = FaultConfig(n_faults=16, n_cycles=64, seed=7)
+    r4 = run_campaign(AMMSpec("lvt", 4, 2, 64, 32), cfg).resilience
+    r2 = run_campaign(AMMSpec("lvt", 2, 2, 64, 32), cfg).resilience
+    assert r4.cover == r2.cover == "replica"
+    # >=3 replicas: every affected read out-voted; 2: flagged only
+    assert r4.affected > 0 and r4.corrected_frac == 1.0 and r4.sdc == 0
+    assert r2.affected > 0 and r2.detected_frac == 1.0 and r2.sdc == 0
+
+
+def test_parity_kinds_have_zero_sdc():
+    cfg = FaultConfig(n_faults=16, n_cycles=64, seed=7)
+    for spec in (AMMSpec("h_ntx_rd", 4, 1, 64, 32),
+                 AMMSpec("hb_ntx", 4, 2, 64, 32)):
+        r = run_campaign(spec, cfg).resilience
+        assert r.cover == "parity" and r.affected > 0
+        assert r.sdc == 0
+        assert r.corrected_frac > 0.9
+
+
+def test_uncovered_kinds_are_pure_sdc():
+    cfg = FaultConfig(n_faults=16, n_cycles=64, seed=7)
+    for spec in (AMMSpec("banked", 4, 4, 64, 32, n_banks=2),
+                 AMMSpec("b_ntx_wr", 1, 2, 64, 32),
+                 AMMSpec("remap", 2, 2, 64, 32)):
+        r = run_campaign(spec, cfg).resilience
+        assert r.cover == "none" and r.affected > 0
+        assert r.corrected == r.detected == 0
+        assert r.sdc == r.affected and r.det_latency == -1.0
+
+
+def test_campaign_is_deterministic():
+    spec = AMMSpec("h_ntx_rd", 4, 1, 64, 32)
+    cfg = FaultConfig(n_faults=8, n_cycles=48, seed=5)
+    assert run_campaign(spec, cfg) == run_campaign(spec, cfg)
+    other = run_campaign(spec, FaultConfig(n_faults=8, n_cycles=48, seed=6))
+    assert other != run_campaign(spec, cfg)
+
+
+# ----------------------------------------------------------------------
+# pinned golden campaigns
+# ----------------------------------------------------------------------
+def _golden_campaign(row):
+    from repro.core.dse.sweep import DEFAULT_DESIGNS, _spec_for
+    from repro.core.fault import run_campaign as rc
+
+    by_label = {d.label: d for d in DEFAULT_DESIGNS}
+    spec = _spec_for(by_label[row["design"]], 256, 32)
+    cfg = FaultConfig(n_faults=32, n_cycles=96, seed=7)
+    return rc(spec, cfg)
+
+
+@pytest.mark.parametrize("row", GOLDEN, ids=lambda r: r["design"])
+def test_golden_campaigns_pinned(row):
+    res = _golden_campaign(row)
+    r = res.resilience
+    assert res.spec_label == row["spec"]
+    assert r.cover == row["cover"]
+    assert (r.n_faults, r.n_reads) == (row["n_faults"], row["n_reads"])
+    assert (r.benign, r.corrected, r.detected, r.sdc) == (
+        row["benign"], row["corrected"], row["detected"], row["sdc"])
+    assert r.sdc_rate == pytest.approx(row["sdc_rate"], abs=1e-9)
+    assert r.corrected_frac == pytest.approx(row["corrected_frac"], abs=1e-9)
+    assert r.detected_frac == pytest.approx(row["detected_frac"], abs=1e-9)
+    assert r.det_latency == pytest.approx(row["det_latency"], abs=1e-9)
+    assert list(res.outcomes) == row["outcomes"]
+
+
+# ----------------------------------------------------------------------
+# DSE integration
+# ----------------------------------------------------------------------
+def test_sweep_attaches_resilience():
+    from repro.core.bench import get_trace
+    from repro.core.dse import run_sweep
+    from repro.core.dse.sweep import DEFAULT_DESIGNS
+
+    designs = [d for d in DEFAULT_DESIGNS
+               if d.label in ("banked4", "h_ntx_rd-4R1W", "lvt-4R2W")]
+    pts = run_sweep(get_trace("gemm_ncubed"), designs, (1,),
+                    faults=FaultConfig(n_faults=8, n_cycles=48, seed=3))
+    by = {p.design: p for p in pts}
+    assert by["banked4"].res_cover == "none"
+    assert by["banked4"].res_corrected == 0.0
+    assert by["h_ntx_rd-4R1W"].res_cover == "parity"
+    assert by["h_ntx_rd-4R1W"].res_sdc_rate == 0.0
+    assert by["lvt-4R2W"].res_cover == "replica"
+    # plain sweeps keep the sentinels
+    clean = run_sweep(get_trace("gemm_ncubed"), designs, (1,))
+    assert all(p.res_cover == "-" and p.res_latency == -1.0 for p in clean)
+    # timing fields are identical with and without the campaign
+    assert [(p.design, p.cycles, p.time_us) for p in pts] \
+        == [(p.design, p.cycles, p.time_us) for p in clean]

@@ -70,7 +70,7 @@ def test_cache_tolerates_corrupt_entries(tmp_path, pt):
     pts2 = run_sweep(pt, DESIGNS[:1], (1,), cache=cache2)
     assert cache2.misses == 1 and pts1 == pts2
     # the corrupt entry was rewritten with the fresh result
-    assert json.loads(path.read_text())["cycles"] == pts1[0].cycles
+    assert json.loads(path.read_text())["point"]["cycles"] == pts1[0].cycles
 
 
 # ----------------------------------------------------------------------

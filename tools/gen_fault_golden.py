@@ -1,0 +1,93 @@
+"""Regenerate tests/golden_faults.json: pinned seeded fault campaigns.
+
+Each golden row is the full classified outcome of one deterministic
+campaign — ``FaultConfig(n_faults=32, n_cycles=96, seed=7)`` at the
+canonical 256x32b DSE geometry — for one design per AMM kind.  The
+rows pin:
+
+* the aggregate :class:`repro.core.fault.Resilience` summary (counts,
+  SDC rate, corrected/detected fractions, detection latency), and
+* the per-fault worst-outcome sequence,
+
+so any drift in the fault model, the replay fault hook, the classifier
+or the per-spec RNG seeding fails ``tests/test_fault.py`` loudly.
+
+Usage::
+
+    PYTHONPATH=src python tools/gen_fault_golden.py [--dry-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parents[1]
+               / "tests" / "golden_faults.json")
+
+# one representative per design kind, by DSE design label
+DESIGN_LABELS = (
+    "banked8",
+    "multipump-2R2W",
+    "h_ntx_rd-4R1W",
+    "b_ntx_wr-1R2W",
+    "hb_ntx-4R2W",
+    "lvt-2R2W",
+    "lvt-4R2W",
+    "remap-4R2W",
+)
+DEPTH = 256
+WIDTH_BITS = 32
+
+
+def campaign_config():
+    from repro.core.fault import FaultConfig
+
+    return FaultConfig(n_faults=32, n_cycles=96, seed=7)
+
+
+def generate() -> list[dict]:
+    from repro.core.dse.sweep import DEFAULT_DESIGNS, _spec_for
+    from repro.core.fault import run_campaign
+
+    by_label = {d.label: d for d in DEFAULT_DESIGNS}
+    cfg = campaign_config()
+    rows = []
+    for label in DESIGN_LABELS:
+        spec = _spec_for(by_label[label], DEPTH, WIDTH_BITS)
+        res = run_campaign(spec, cfg)
+        r = res.resilience
+        rows.append({
+            "design": label,
+            "spec": res.spec_label,
+            "cover": r.cover,
+            "n_faults": r.n_faults,
+            "n_reads": r.n_reads,
+            "benign": r.benign,
+            "corrected": r.corrected,
+            "detected": r.detected,
+            "sdc": r.sdc,
+            "sdc_rate": round(r.sdc_rate, 9),
+            "corrected_frac": round(r.corrected_frac, 9),
+            "detected_frac": round(r.detected_frac, 9),
+            "det_latency": round(r.det_latency, 9),
+            "outcomes": list(res.outcomes),
+        })
+        print(f"{label:16s} cover={r.cover:8s} sdc={r.sdc:5d} "
+              f"corr={r.corrected:5d} det={r.detected:5d} "
+              f"lat={r.det_latency:.2f}", flush=True)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+    rows = generate()
+    if not args.dry_run:
+        GOLDEN_PATH.write_text(json.dumps(rows, indent=1) + "\n")
+        print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()
