@@ -4,7 +4,8 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
   fig4_dse          — area-cycles / power-cycles DSE per benchmark (Fig 4)
   fig5_locality     — spatial locality + performance ratio (Fig 5)
   tab_synthesis     — AMM design cost table (Sec III-A synthesis results)
-  kernel_microbench — Pallas kernels (interpret mode; TPU is the target)
+  kernel_microbench — blocked kernels: interpret vs compiled rows
+                      (--interpret/--compiled restrict to one mode)
   scheduler_microbench — C cycle loop vs pure-Python fallback (large trace)
   scheduler_batched — batched JAX grid vs per-point C / python loops
   dse_matrix        — full 12x13 DSE matrix: exhaustive C vs
@@ -35,6 +36,11 @@ JOBS = os.cpu_count() or 1
 CACHE_DIR = None
 BACKEND = "auto"  # scheduler cycle-loop backend for the DSE tables
 ARTIFACT_DIR = None  # where fig5_locality drops fig5.csv (None = don't)
+KERNEL_MODES = ("interpret", "compiled")  # kernel_microbench legs
+KERNEL_REPEAT = 20  # timed iterations per kernel row (after warm-up)
+# the interpret legs run the *eager* Pallas interpreter (per-call Python
+# grid walk — the point of the row pair); a few iterations suffice
+KERNEL_REPEAT_INTERPRET = 3
 ROWS: list[dict] = []  # every _row() call, for --json
 
 
@@ -183,23 +189,62 @@ def tab_synthesis() -> None:
 
 
 def kernel_microbench() -> None:
-    """Pallas kernels in interpret mode (CPU validation of TPU target)."""
+    """The blocked kernel surface, interpret mode (the conformance
+    anchor — dispatched *eagerly*, the Pallas interpreter walks the
+    grid in Python per call) vs the compiled path (real Pallas lowering
+    on TPU/GPU, the XLA grid executor on CPU).  Methodology: warm-up +
+    ``block_until_ready`` keep trace/compile out of the timed loop;
+    ``compile_ms`` is reported separately in ``derived`` along with the
+    autotuned block sizes.  ``--interpret`` / ``--compiled`` restrict
+    the run to one mode (default: both, so every ``kernel.X`` row gets
+    a ``kernel.X_compiled`` twin recording the speedup)."""
+    import jax
     import jax.numpy as jnp
 
     from repro.kernels import amm_gather, kv_decode, ssd_chunk
+    from repro.kernels.autotune import get_config, time_compiled
+    from repro.kernels.lowering import resolve_mode
 
+    backend = jax.default_backend()
     rng = np.random.default_rng(0)
+
+    def both_modes(name, make_call, extra, tuned):
+        us_int = None
+        if "interpret" in KERNEL_MODES:
+            us_int, cms = time_compiled(make_call("interpret"),
+                                        repeat=KERNEL_REPEAT_INTERPRET,
+                                        warmup=1)
+            _row(f"kernel.{name}", us_int,
+                 f"{extra};interpret=True;eager=True;compile_ms={cms:.0f}")
+        if "compiled" in KERNEL_MODES:
+            mode = resolve_mode(mode="compiled")
+            us, cms = time_compiled(make_call("compiled"),
+                                    repeat=KERNEL_REPEAT)
+            blocks = ";".join(f"{k}={v}" for k, v in sorted(tuned.items()))
+            d = f"{extra};mode={mode};{blocks};compile_ms={cms:.0f}"
+            if us_int is not None:
+                d += f";speedup_vs_interpret={us_int / us:.1f}x"
+            _row(f"kernel.{name}_compiled", us, d)
+
     table = jnp.asarray(rng.standard_normal((1024, 128)), jnp.float32)
     idx = jnp.asarray(rng.integers(0, 1024, 256), jnp.int32)
-    us = _t(lambda: amm_gather(table, idx, n_banks=4).block_until_ready())
-    _row("kernel.amm_gather_1024x128_n256", us, "banks=4;interpret=True")
+    both_modes(
+        "amm_gather_1024x128_n256",
+        lambda m: lambda: amm_gather(table, idx, n_banks=4, mode=m),
+        "banks=4",
+        get_config("amm_gather", backend, resolve_mode(mode="compiled"),
+                   v=1024, d=128, nb=4, n=256))
 
     q = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((4, 4, 512, 64)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((4, 4, 512, 64)), jnp.float32)
     lens = jnp.asarray([512, 300, 100, 512], jnp.int32)
-    us = _t(lambda: kv_decode(q, k, v, lens, n_banks=8).block_until_ready())
-    _row("kernel.kv_decode_b4_s512", us, "banks=8;interpret=True")
+    both_modes(
+        "kv_decode_b4_s512",
+        lambda m: lambda: kv_decode(q, k, v, lens, n_banks=8, mode=m),
+        "banks=8",
+        get_config("kv_decode", backend, resolve_mode(mode="compiled"),
+                   b=4, hq=8, hkv=4, s=512, d=64, nb=8))
 
     x = jnp.asarray(rng.standard_normal((2, 4, 64, 32)), jnp.float32)
     dt = jnp.asarray(rng.uniform(0.01, 0.4, (2, 4, 64)), jnp.float32)
@@ -207,8 +252,26 @@ def kernel_microbench() -> None:
     B = jnp.asarray(rng.standard_normal((2, 64, 16)), jnp.float32)
     C = jnp.asarray(rng.standard_normal((2, 64, 16)), jnp.float32)
     h0 = jnp.zeros((2, 4, 32, 16), jnp.float32)
-    us = _t(lambda: ssd_chunk(x, dt, cum, B, C, h0)[0].block_until_ready())
-    _row("kernel.ssd_chunk_q64", us, "interpret=True")
+    both_modes(
+        "ssd_chunk_q64",
+        lambda m: lambda: ssd_chunk(x, dt, cum, B, C, h0, mode=m)[0],
+        "bt2xh4",
+        get_config("ssd_chunk", backend, resolve_mode(mode="compiled"),
+                   bt=2, h=4, q=64, p=32, n=16))
+
+    # serving-scale decode: the ROADMAP's LLM-workload shape class
+    # (large batch, long context, mixed request lengths)
+    bs, hqs, hkvs, ss, ds = 8, 16, 4, 1024, 64
+    q2 = jnp.asarray(rng.standard_normal((bs, hqs, ds)), jnp.float32)
+    k2 = jnp.asarray(rng.standard_normal((bs, hkvs, ss, ds)), jnp.float32)
+    v2 = jnp.asarray(rng.standard_normal((bs, hkvs, ss, ds)), jnp.float32)
+    lens2 = jnp.asarray(rng.integers(0, ss + 1, bs), jnp.int32)
+    both_modes(
+        "kv_decode_serving_b8_s1024",
+        lambda m: lambda: kv_decode(q2, k2, v2, lens2, n_banks=8, mode=m),
+        "banks=8;ragged=True",
+        get_config("kv_decode", backend, resolve_mode(mode="compiled"),
+                   b=bs, hq=hqs, hkv=hkvs, s=ss, d=ds, nb=8))
 
 
 def amm_replay() -> None:
@@ -589,6 +652,11 @@ def main(argv=None) -> None:
     ap.add_argument("--artifact-dir", default=None, metavar="DIR",
                     help="directory for table CSV artifacts "
                          "(fig5_locality writes fig5.csv there)")
+    mode_grp = ap.add_mutually_exclusive_group()
+    mode_grp.add_argument("--interpret", action="store_true",
+                          help="kernel_microbench: interpret rows only")
+    mode_grp.add_argument("--compiled", action="store_true",
+                          help="kernel_microbench: compiled rows only")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as machine-readable JSON "
                          "(e.g. BENCH.json) for cross-PR perf tracking")
@@ -597,6 +665,11 @@ def main(argv=None) -> None:
     FULL, JOBS, CACHE_DIR = args.full, args.jobs, args.cache_dir
     BACKEND = args.backend
     ARTIFACT_DIR = args.artifact_dir
+    global KERNEL_MODES
+    if args.interpret:
+        KERNEL_MODES = ("interpret",)
+    elif args.compiled:
+        KERNEL_MODES = ("compiled",)
 
     print("name,us_per_call,derived")
     for name, fn in TABLES.items():

@@ -1,3 +1,5 @@
+from repro.kernels.lowering import resolve_mode, supports_pallas_lowering
 from repro.kernels.ops import amm_gather, kv_decode, pack_amm_banks, ssd_chunk
 
-__all__ = ["amm_gather", "kv_decode", "ssd_chunk", "pack_amm_banks"]
+__all__ = ["amm_gather", "kv_decode", "ssd_chunk", "pack_amm_banks",
+           "resolve_mode", "supports_pallas_lowering"]

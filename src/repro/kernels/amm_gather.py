@@ -1,18 +1,22 @@
-"""AMM XOR-banked gather — the paper's H-NTX-Rd read path as a Pallas
-TPU kernel.
+"""AMM XOR-banked gather — the paper's H-NTX-Rd read path as a blocked
+kernel.
 
-TPU adaptation: the logical table (an embedding shard, an expert bank,
-a KV page table) is depth-partitioned into ``n_banks`` VMEM-resident
-banks plus one XOR parity bank (parity[o] = XOR_b bank_b[o]).  Each
-grid step serves a block of gather requests two-at-a-time (2 read
-ports): even slots read the *direct* path, odd slots read the
-*reconstruction* path — parity XOR all other banks — which is what
-hardware does when both requests of a cycle hit the same bank.  Either
-path returns the same word (the H-NTX-Rd invariant), so the kernel is
-conflict-free by construction, independent of the request pattern's
-spatial locality.
+The logical table (an embedding shard, an expert bank, a KV page table)
+is depth-partitioned into ``n_banks`` banks plus one XOR parity bank
+(parity[o] = XOR_b bank_b[o]).  Each grid step serves a block of
+``block_n`` gather requests two-at-a-time (2 read ports): even slots
+read the *direct* path, odd slots read the *reconstruction* path —
+parity XOR all other banks — which is what the hardware does when both
+requests of a cycle hit the same bank.  Either path returns the same
+word (the H-NTX-Rd invariant), so the kernel is conflict-free by
+construction, independent of the request pattern's spatial locality.
 
-Payloads are bitcast to unsigned ints for XOR; ops.py handles fp views.
+The block body is fully vectorized (one gather + ``n_banks`` masked XOR
+sweeps per block — no per-request scalar loads, no Python-int ref
+indexing), so the same function lowers through every ``lowering.py``
+mode: the Pallas interpreter, real ``pallas_call``, and the compiled
+XLA grid path.  Payloads are bitcast to unsigned ints for XOR; ops.py
+handles fp views.
 """
 from __future__ import annotations
 
@@ -20,49 +24,45 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.lowering import Spec, grid_call
 
 
-def _kernel(idx_ref, banks_ref, parity_ref, out_ref, *, n_banks: int,
-            rows: int, block_n: int):
-    def body(i, _):
-        a = idx_ref[i]
-        bank = a // rows
-        off = a - bank * rows
-        direct = pl.load(banks_ref, (bank, off, slice(None)))
-        # reconstruction path: parity ^ XOR_{j != bank} bank_j[off]
-        acc = pl.load(parity_ref, (off, slice(None)))
-        for j in range(n_banks):              # static unroll, n_banks small
-            # index with a traced scalar: newer pallas rejects raw ints
-            row = pl.load(banks_ref, (jnp.asarray(j, jnp.int32), off,
-                                      slice(None)))
-            acc = jnp.where(j == bank, acc, acc ^ row)
-        use_recon = (i % 2) == 1               # odd slot = second port
-        pl.store(out_ref, (i, slice(None)),
-                 jnp.where(use_recon, acc, direct))
-        return 0
-
-    jax.lax.fori_loop(0, block_n, body, 0)
+def _gather_block(idx, banks, parity, *, n_banks: int, rows: int):
+    """idx: [BN] int32; banks: [NB, R, D] uint; parity: [R, D] uint
+    -> [BN, D] uint.  Even request slots take the direct bank read,
+    odd slots the XOR-reconstruction (parity) path."""
+    bank = idx // rows
+    off = idx - bank * rows
+    direct = banks[bank, off]                     # [BN, D] vector gather
+    # reconstruction path: parity[off] ^ XOR_{j != bank} bank_j[off]
+    acc = parity[off]
+    for j in range(n_banks):                      # static unroll, NB small
+        acc = jnp.where((bank == j)[:, None], acc, acc ^ banks[j, off])
+    slot = jax.lax.iota(jnp.int32, idx.shape[0])
+    use_recon = (slot % 2) == 1                   # odd slot = second port
+    return jnp.where(use_recon[:, None], acc, direct)
 
 
 def amm_gather_u32(banks: jax.Array, parity: jax.Array, idx: jax.Array,
-                   block_n: int = 128, interpret: bool = True) -> jax.Array:
+                   block_n: int = 128, mode: str = "interpret") -> jax.Array:
     """banks: [NB, R, D] uint; parity: [R, D] uint; idx: [N] int32.
-    Returns [N, D] uint gathered rows."""
+    Returns [N, D] uint gathered rows.  ``mode`` must be resolved
+    ('pallas'|'interpret'|'xla'), see ``lowering.resolve_mode``."""
     nb, rows, d = banks.shape
     n = idx.shape[0]
     block_n = min(block_n, n)
     assert n % block_n == 0, "request count must divide by block"
-    grid = (n // block_n,)
-    return pl.pallas_call(
-        functools.partial(_kernel, n_banks=nb, rows=rows, block_n=block_n),
-        grid=grid,
+    call = grid_call(
+        functools.partial(_gather_block, n_banks=nb, rows=rows),
+        grid=(n // block_n,),
         in_specs=[
-            pl.BlockSpec((block_n,), lambda i: (i,)),
-            pl.BlockSpec((nb, rows, d), lambda i: (0, 0, 0)),
-            pl.BlockSpec((rows, d), lambda i: (0, 0)),
+            Spec((block_n,), lambda i: (i,)),
+            Spec((nb, rows, d), lambda i: (0, 0, 0)),
+            Spec((rows, d), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, d), banks.dtype),
-        interpret=interpret,
-    )(idx, banks, parity)
+        out_specs=[Spec((block_n, d), lambda i: (i, 0))],
+        out_shapes=[jax.ShapeDtypeStruct((n, d), banks.dtype)],
+        mode=mode,
+    )
+    return call(idx, banks, parity)

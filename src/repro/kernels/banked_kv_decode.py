@@ -2,16 +2,24 @@
 the decode-attention hot loop.
 
 The KV cache of one (batch, kv-head) is partitioned into ``n_banks``
-sequence banks (independent VMEM tiles).  A decode step is a multi-port
-read burst over those banks; the kernel streams the banks with the
+sequence banks (independent tiles).  A decode step is a multi-port read
+burst over those banks; the kernel streams the banks with the
 online-softmax (flash) recurrence, so each bank is read exactly once
 per step and never materializes an [S] score vector in HBM.
 
-Grid: (batch, q_heads).  GQA is handled in the index_map — q head h
-reads kv head h // group.  Per grid cell:
-  q:   [D]                (block of the [B, Hq, D] query)
-  k/v: [NB, SB, D]        (that kv head's banked cache)
-  out: [D]
+Grid: (batch, q_heads / block_h).  ``block_h`` query heads are served
+per grid cell — it must divide the GQA group so the whole block shares
+one kv head, and the bank stream (the expensive loads) is then
+amortized across the block instead of re-read per head.  Ragged
+batches: ``lengths[b]`` masks each row's positions ``>= seq_len``
+out of both the max and the weight sum (padded K/V content never
+reaches the output), and a fully-empty row (``seq_len == 0``) returns
+zeros rather than NaN — the shape class mixed-length serving batches
+need.
+
+The block body is backend-agnostic (values in, values out) and lowers
+through every ``lowering.py`` mode: Pallas interpreter, real
+``pallas_call``, and the compiled XLA grid path.
 """
 from __future__ import annotations
 
@@ -19,56 +27,76 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from jax import lax
+
+from repro.kernels.lowering import Spec, grid_call
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, out_ref, *, n_banks: int,
-            bank_len: int, scale: float):
-    q = q_ref[0, 0, :].astype(jnp.float32)                 # [D]
-    kv_len = len_ref[0]
+def _decode_block(len_blk, q_blk, k_blk, v_blk, *, n_banks: int,
+                  bank_len: int, scale: float):
+    """len_blk: [1] int32; q_blk: [1, BH, D]; k/v_blk: [1, 1, NB, SB, D]
+    -> [1, BH, D].  Flash recurrence over banks, vectorized over the
+    BH-head block."""
+    q = q_blk[0].astype(jnp.float32)                       # [BH, D]
+    kv_len = len_blk[0]
+    kb = k_blk[0, 0]                                       # [NB, SB, D]
+    vb = v_blk[0, 0]
+    bh, d = q.shape
 
     def bank_body(j, carry):
-        m, l, acc = carry
-        k = k_ref[0, 0, j].astype(jnp.float32)             # [SB, D]
-        v = v_ref[0, 0, j].astype(jnp.float32)
-        s = jnp.dot(k, q) * scale                          # [SB]
-        pos = j * bank_len + jax.lax.iota(jnp.int32, bank_len)
-        s = jnp.where(pos < kv_len, s, -1e30)
-        m_new = jnp.maximum(m, jnp.max(s))
-        p = jnp.exp(s - m_new)
-        p = jnp.where(pos < kv_len, p, 0.0)
+        m, l, acc = carry                                  # [BH] [BH] [BH,D]
+        k = kb[j].astype(jnp.float32)
+        v = vb[j].astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale                        # [BH, SB]
+        pos = j * bank_len + lax.iota(jnp.int32, bank_len)
+        valid = pos < kv_len                               # [SB]
+        s = jnp.where(valid[None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(valid[None, :], p, 0.0)              # empty-bank exp(0)
         alpha = jnp.exp(m - m_new)
-        l_new = l * alpha + jnp.sum(p)
-        acc_new = acc * alpha + jnp.dot(p, v)              # [D]
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)     # [BH, D]
         return m_new, l_new, acc_new
 
-    d = q.shape[0]
-    m0 = jnp.float32(-1e30)
-    l0 = jnp.float32(0.0)
-    a0 = jnp.zeros((d,), jnp.float32)
-    m, l, acc = jax.lax.fori_loop(0, n_banks, bank_body, (m0, l0, a0))
-    out_ref[0, 0, :] = (acc / jnp.maximum(l, 1e-30)).astype(out_ref.dtype)
+    m0 = jnp.full((bh,), -1e30, jnp.float32)
+    l0 = jnp.zeros((bh,), jnp.float32)
+    a0 = jnp.zeros((bh, d), jnp.float32)
+    carry = (m0, l0, a0)
+    for j in range(n_banks):       # static unroll: NB is a compile-time
+        carry = bank_body(j, carry)  # constant, loop overhead vanishes
+    m, l, acc = carry
+    # seq_len == 0 leaves l == 0: define the row as zeros, not NaN
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    return out[None].astype(q_blk.dtype)
 
 
 def banked_kv_decode(q: jax.Array, k_banks: jax.Array, v_banks: jax.Array,
-                     lengths: jax.Array, interpret: bool = True) -> jax.Array:
+                     lengths: jax.Array, block_h: int = 1,
+                     mode: str = "interpret") -> jax.Array:
     """q: [B, Hq, D]; k/v_banks: [B, Hkv, NB, SB, D]; lengths: [B] int32.
-    Returns [B, Hq, D]."""
+    Returns [B, Hq, D].  ``block_h`` must divide the GQA group
+    (Hq // Hkv); ``mode`` must be resolved, see ``lowering.resolve_mode``."""
     b, hq, d = q.shape
     _, hkv, nb, sb, _ = k_banks.shape
     group = hq // hkv
+    block_h = min(block_h, group)
+    assert group % block_h == 0, "head block must divide the GQA group"
     scale = 1.0 / (d ** 0.5)
-    grid = (b, hq)
-    return pl.pallas_call(
-        functools.partial(_kernel, n_banks=nb, bank_len=sb, scale=scale),
-        grid=grid,
+    call = grid_call(
+        functools.partial(_decode_block, n_banks=nb, bank_len=sb,
+                          scale=scale),
+        grid=(b, hq // block_h),
         in_specs=[
-            pl.BlockSpec((1,), lambda i, h: (i,)),
-            pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
-            pl.BlockSpec((1, 1, nb, sb, d), lambda i, h: (i, h // group, 0, 0, 0)),
-            pl.BlockSpec((1, 1, nb, sb, d), lambda i, h: (i, h // group, 0, 0, 0)),
+            Spec((1,), lambda i, h: (i,)),
+            Spec((1, block_h, d), lambda i, h: (i, h, 0)),
+            Spec((1, 1, nb, sb, d),
+                 lambda i, h: (i, (h * block_h) // group, 0, 0, 0)),
+            Spec((1, 1, nb, sb, d),
+                 lambda i, h: (i, (h * block_h) // group, 0, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, d), lambda i, h: (i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
-        interpret=interpret,
-    )(lengths, q, k_banks, v_banks)
+        out_specs=[Spec((1, block_h, d), lambda i, h: (i, h, 0))],
+        out_shapes=[jax.ShapeDtypeStruct((b, hq, d), q.dtype)],
+        mode=mode,
+    )
+    return call(lengths, q, k_banks, v_banks)

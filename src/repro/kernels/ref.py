@@ -53,7 +53,14 @@ def amm_gather_replay_ref(table: jax.Array, idx: jax.Array) -> jax.Array:
 
 def kv_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                   lengths: jax.Array) -> jax.Array:
-    """q: [B, Hq, D]; k/v: [B, Hkv, S, D]; lengths: [B] -> [B, Hq, D]."""
+    """Masked dense reference.  q: [B, Hq, D]; k/v: [B, Hkv, S, D];
+    lengths: [B] per-row valid lengths -> [B, Hq, D].
+
+    Positions ``>= lengths[b]`` are excluded from the softmax, so padded
+    K/V content never reaches the output; a fully-empty row
+    (``lengths[b] == 0``) decodes to zeros — the same ragged-batch
+    semantics the banked kernel implements (softmax over -inf would
+    otherwise be NaN)."""
     b, hq, d = q.shape
     hkv, s = k.shape[1], k.shape[2]
     g = hq // hkv
@@ -62,7 +69,11 @@ def kv_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     scores = scores / jnp.sqrt(d)
     valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
     scores = jnp.where(valid, scores, -jnp.inf)
-    w = jax.nn.softmax(scores, axis=-1)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(valid, jnp.exp(scores - jnp.where(jnp.isfinite(m), m, 0.0)),
+                  0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    w = p / jnp.maximum(denom, 1e-30)
     out = jnp.einsum("bhgs,bhsd->bhgd", w, v.astype(jnp.float32))
     return out.reshape(b, hq, d).astype(q.dtype)
 

@@ -1,10 +1,11 @@
 """Mamba2 SSD chunk kernel — one chunk step of the state-space dual form
 as two MXU matmuls plus a decay mask.
 
-Grid: (batch, heads).  Per grid cell, for a chunk of Q tokens:
-  inputs : x [Q, P], dt [Q], cum [Q] (cumulative log-decay),
-           B [Q, N], C [Q, N], h_in [P, N]
-  outputs: y [Q, P], h_out [P, N]
+Grid: (batch, heads / block_h).  Per grid cell, for a chunk of Q tokens
+and a block of ``block_h`` heads:
+  inputs : x [BH, Q, P], dt [BH, Q], cum [BH, Q] (cumulative log-decay),
+           B [Q, N], C [Q, N], h_in [BH, P, N]
+  outputs: y [BH, Q, P], h_out [BH, P, N]
 
   L[i,j]  = exp(cum_i - cum_j)        for j <= i, else 0
   y       = ((C B^T) * L) @ (dt * x)  +  (C * exp(cum)) @ h_in^T
@@ -12,7 +13,11 @@ Grid: (batch, heads).  Per grid cell, for a chunk of Q tokens:
 
 The [Q,N]x[N,Q] and [Q,Q]x[Q,P] contractions are MXU-shaped when
 Q, N, P are multiples of 128/8; the inter-chunk recurrence stays a
-lax.scan in repro.models.ssm (sequential by nature).
+lax.scan in repro.models.ssm (sequential by nature).  ``block_h``
+batches heads through one grid cell so the shared B/C projections are
+loaded once per block; the body is backend-agnostic and lowers through
+every ``lowering.py`` mode (Pallas interpreter, real ``pallas_call``,
+compiled XLA grid path).
 """
 from __future__ import annotations
 
@@ -20,61 +25,66 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.lowering import Spec, grid_call
 
 
-def _kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, h_ref, y_ref, hout_ref,
-            *, q: int):
-    x = x_ref[0, 0].astype(jnp.float32)        # [Q, P]
-    dt = dt_ref[0, 0].astype(jnp.float32)      # [Q]
-    cum = cum_ref[0, 0].astype(jnp.float32)    # [Q]
-    B = b_ref[0].astype(jnp.float32)           # [Q, N]
-    C = c_ref[0].astype(jnp.float32)           # [Q, N]
-    h = h_ref[0, 0].astype(jnp.float32)        # [P, N]
+def _ssd_block(x_blk, dt_blk, cum_blk, b_blk, c_blk, h_blk, *, q: int):
+    x = x_blk[0].astype(jnp.float32)           # [BH, Q, P]
+    dt = dt_blk[0].astype(jnp.float32)         # [BH, Q]
+    cum = cum_blk[0].astype(jnp.float32)       # [BH, Q]
+    B = b_blk[0].astype(jnp.float32)           # [Q, N]
+    C = c_blk[0].astype(jnp.float32)           # [Q, N]
+    h = h_blk[0].astype(jnp.float32)           # [BH, P, N]
 
     ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
-    diff = jnp.where(jj <= ii, cum[:, None] - cum[None, :], -1e30)
-    decay = jnp.exp(diff)                                     # [Q, Q]
-    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32) * decay
-    y = jnp.dot(scores, dt[:, None] * x,
-                preferred_element_type=jnp.float32)           # [Q, P]
-    y = y + jnp.dot(C * jnp.exp(cum)[:, None], h.T,
-                    preferred_element_type=jnp.float32)
-    tail = jnp.exp(cum[-1] - cum) * dt                        # [Q]
-    h_out = jnp.exp(cum[-1]) * h + jnp.dot((tail[:, None] * x).T, B,
-                                           preferred_element_type=jnp.float32)
-    y_ref[0, 0] = y.astype(y_ref.dtype)
-    hout_ref[0, 0] = h_out.astype(hout_ref.dtype)
+    diff = jnp.where(jj[None] <= ii[None],
+                     cum[:, :, None] - cum[:, None, :], -1e30)
+    decay = jnp.exp(diff)                                     # [BH, Q, Q]
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    scores = cb[None] * decay
+    y = jnp.einsum("hij,hjp->hip", scores, dt[:, :, None] * x,
+                   preferred_element_type=jnp.float32)        # [BH, Q, P]
+    y = y + jnp.einsum("hin,hpn->hip", C[None] * jnp.exp(cum)[:, :, None], h,
+                       preferred_element_type=jnp.float32)
+    tail = jnp.exp(cum[:, -1:] - cum) * dt                    # [BH, Q]
+    h_out = jnp.exp(cum[:, -1])[:, None, None] * h + jnp.einsum(
+        "hjp,jn->hpn", tail[:, :, None] * x, B,
+        preferred_element_type=jnp.float32)
+    return y[None].astype(x_blk.dtype), h_out[None].astype(h_blk.dtype)
 
 
 def ssd_chunk_step(x: jax.Array, dt: jax.Array, cum: jax.Array,
                    B: jax.Array, C: jax.Array, h_in: jax.Array,
-                   interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                   block_h: int = 1, mode: str = "interpret"
+                   ) -> tuple[jax.Array, jax.Array]:
     """x: [Bt, H, Q, P]; dt/cum: [Bt, H, Q]; B/C: [Bt, Q, N];
-    h_in: [Bt, H, P, N] -> (y [Bt,H,Q,P], h_out [Bt,H,P,N])."""
+    h_in: [Bt, H, P, N] -> (y [Bt,H,Q,P], h_out [Bt,H,P,N]).
+    ``block_h`` must divide H; ``mode`` must be resolved."""
     bt, h, q, p = x.shape
     n = B.shape[-1]
-    grid = (bt, h)
-    y, hout = pl.pallas_call(
-        functools.partial(_kernel, q=q),
-        grid=grid,
+    block_h = min(block_h, h)
+    assert h % block_h == 0, "head block must divide the head count"
+    call = grid_call(
+        functools.partial(_ssd_block, q=q),
+        grid=(bt, h // block_h),
         in_specs=[
-            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, q), lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, q, n), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, q, n), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+            Spec((1, block_h, q, p), lambda i, j: (i, j, 0, 0)),
+            Spec((1, block_h, q), lambda i, j: (i, j, 0)),
+            Spec((1, block_h, q), lambda i, j: (i, j, 0)),
+            Spec((1, q, n), lambda i, j: (i, 0, 0)),
+            Spec((1, q, n), lambda i, j: (i, 0, 0)),
+            Spec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, q, p), lambda i, j: (i, j, 0, 0)),
-            pl.BlockSpec((1, 1, p, n), lambda i, j: (i, j, 0, 0)),
+            Spec((1, block_h, q, p), lambda i, j: (i, j, 0, 0)),
+            Spec((1, block_h, p, n), lambda i, j: (i, j, 0, 0)),
         ],
-        out_shape=[
+        out_shapes=[
             jax.ShapeDtypeStruct((bt, h, q, p), jnp.float32),
             jax.ShapeDtypeStruct((bt, h, p, n), jnp.float32),
         ],
-        interpret=interpret,
-    )(x, dt, cum, B, C, h_in)
-    return y, hout
+        mode=mode,
+    )
+    return call(x, dt, cum, B, C, h_in)

@@ -2,9 +2,9 @@
 
 ``banked_embedding_lookup`` routes through the XOR-banked Pallas kernel
 when the planner chose AMM for the embedding stream (low-locality,
-zipf-skewed token ids); otherwise it uses the plain XLA gather.  On
-non-TPU backends the kernel runs in interpret mode — tests assert both
-paths agree bit-exactly.
+zipf-skewed token ids); otherwise it uses the plain XLA gather.  The
+kernel runs compiled on every backend (real Pallas lowering on TPU/GPU,
+the XLA grid path on CPU) — tests assert both paths agree bit-exactly.
 """
 from __future__ import annotations
 
@@ -21,8 +21,6 @@ def banked_embedding_lookup(table: jax.Array, token_ids: jax.Array,
     """table: [V, D]; token_ids: [...] int -> [..., D]."""
     flat = token_ids.reshape(-1)
     if plan is not None and plan.use_amm and table.shape[0] % plan.n_banks == 0:
-        n = flat.shape[0]
-        block = 128 if n % 128 == 0 else 1
         out = amm_gather(table, flat, n_banks=plan.n_banks,
                          interpret=interpret)
     else:

@@ -40,11 +40,14 @@ class BankedKVCache:
         )
 
     def append(self, k_new: jax.Array, v_new: jax.Array) -> "BankedKVCache":
-        """k/v_new: [B, Hkv, 1, D] at each sequence's current length.
-        (Uniform-length batches use the same scalar position.)"""
-        pos = self.length[0]
-        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), pos, axis=2)
-        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), pos, axis=2)
+        """k/v_new: [B, Hkv, 1, D] written at each row's *own* current
+        length — mixed-length batches (ragged serving traffic) place
+        each row's token independently via a per-row scatter."""
+        rows = jnp.arange(self.k.shape[0])
+        k = self.k.at[rows, :, self.length].set(
+            k_new[:, :, 0].astype(self.k.dtype))
+        v = self.v.at[rows, :, self.length].set(
+            v_new[:, :, 0].astype(self.v.dtype))
         return dataclasses.replace(self, k=k, v=v, length=self.length + 1)
 
     def decode_read(self, q: jax.Array, interpret: bool | None = None
