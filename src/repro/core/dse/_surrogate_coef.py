@@ -39,6 +39,14 @@ STALL = {
     "write_pair_stalls": {"b_ntx_wr": 0.532421, "hb_ntx": 0.395632},
 }
 
+# drift guard: the fitted stall models must cover exactly the
+# scheduler's stall taxonomy (re-fit after changing STALL_KEYS)
+from repro.core.sim.arbiter import STALL_KEYS as _STALL_KEYS  # noqa: E402
+
+assert set(STALL) == {f"{k}_stalls" for k in _STALL_KEYS}, \
+    "surrogate STALL coefficients out of sync with STALL_KEYS; re-run " \
+    "tools/fit_surrogate.py"
+
 FIT_STATS = {
     "aes": {
         "rho": 0.9671,

@@ -531,6 +531,38 @@ def _run_batched_jax(
             results[idx] = point_from_schedule(pt, dp, u, cfg, res)
 
 
+def _legality_pass(pt: PreparedTrace, designs: Sequence[DesignPoint],
+                   mem_latency: int, points: "Sequence[DSEPoint]",
+                   verbose: bool) -> None:
+    """Independently re-check every sweep point's schedule legality.
+
+    Each point's config is rebuilt from its design label, re-scheduled
+    with issue-event logging, and validated by ``repro.core.verify``;
+    the sweep's own cycle count is cross-checked against the audited
+    run, so a stale/corrupt cache entry also fails here.  Raises
+    ``LegalityError`` on the first violating point.
+    """
+    from repro.core.dse.sweep import schedule_config_for
+    from repro.core.verify import Violation, check_schedule
+
+    by_label = {dp.label: dp for dp in designs}
+    t0 = time.perf_counter()
+    for p in points:
+        cfg = schedule_config_for(pt, by_label[p.design], p.unroll,
+                                  mem_latency)
+        rep = check_schedule(pt, cfg)
+        if rep.result.cycles != p.cycles:
+            rep.violations.append(Violation(
+                "counter",
+                f"sweep point {p.design}@u{p.unroll} reports {p.cycles} "
+                f"cycles but the audited re-run took "
+                f"{rep.result.cycles}"))
+        rep.raise_if_failed()
+    _vlog(verbose,
+          f"{pt.trace.name}: legality-checked {len(points)} points in "
+          f"{time.perf_counter() - t0:.3f}s (0 violations)")
+
+
 def run_sweep(
     tr: "T.Trace | PreparedTrace",
     designs: Sequence[DesignPoint] = DEFAULT_DESIGNS,
@@ -547,6 +579,7 @@ def run_sweep(
     chunk_timeout: "float | None" = None,
     chunk_retries: int = 2,
     verbose: bool = False,
+    check: bool = False,
 ) -> list[DSEPoint]:
     """Evaluate every ``(design, unroll)`` composition on one trace.
 
@@ -593,6 +626,13 @@ def run_sweep(
         the remaining chunks fall back to serial in-process evaluation.
       verbose: per-chunk progress lines on stderr (points done/total,
         cache hits, chunk wall-clock).
+      check: run the independent legality checker
+        (``repro.core.verify``) over every returned point after the
+        sweep: each point's schedule is re-executed with issue-event
+        logging, validated against rules compiled from its AMMSpecs,
+        its static lower bounds, and the sweep's own cycle count
+        (catching stale cache entries too).  Raises
+        ``repro.core.verify.LegalityError`` on any violation.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, "
@@ -608,9 +648,11 @@ def run_sweep(
         from repro.core.dse.surrogate import CALIBRATED_MEM_LATENCY
 
         if mem_latency == CALIBRATED_MEM_LATENCY:
-            return _attach_faults(
-                _run_pruned(pt, designs, unrolls, mem_latency, cache,
-                            margin, verbose), designs, faults)
+            pruned = _run_pruned(pt, designs, unrolls, mem_latency, cache,
+                                 margin, verbose)
+            if check:
+                _legality_pass(pt, designs, mem_latency, pruned, verbose)
+            return _attach_faults(pruned, designs, faults)
         _vlog(verbose,
               f"{pt.trace.name}: surrogate calibrated at mem_latency="
               f"{CALIBRATED_MEM_LATENCY}, got {mem_latency}: "
@@ -665,6 +707,8 @@ def run_sweep(
             cache.put(keys[idx], results[idx])
 
     assert all(p is not None for p in results)
+    if check:
+        _legality_pass(pt, designs, mem_latency, results, verbose)
     return _attach_faults(results, designs, faults)  # type: ignore
 
 
@@ -686,6 +730,7 @@ def run_sweep_bench(
     chunk_timeout: "float | None" = None,
     chunk_retries: int = 2,
     verbose: bool = False,
+    check: bool = False,
     stats: "dict | None" = None,
 ) -> list[DSEPoint]:
     """Sweep a registered benchmark by name, with a cold fast path.
@@ -710,7 +755,9 @@ def run_sweep_bench(
     unrolls = tuple(unrolls)
     bkey = bench_mod.trace_cache_key(bench, params, full=full)
 
-    if cache is not None:
+    # a legality audit re-runs every schedule against the real trace,
+    # so the trace-free fully-cached fast path cannot serve it
+    if cache is not None and not check:
         fp = cache.manifest_get(bkey)
         if fp is not None:
             hits: "list[DSEPoint] | None" = []
@@ -739,7 +786,8 @@ def run_sweep_bench(
                     jobs=jobs, cache=cache, backend=backend, prune=prune,
                     margin=margin, faults=faults,
                     chunk_timeout=chunk_timeout,
-                    chunk_retries=chunk_retries, verbose=verbose)
+                    chunk_retries=chunk_retries, verbose=verbose,
+                    check=check)
     if cache is not None:
         cache.manifest_put(bkey, pt.fingerprint)
     return res
@@ -796,6 +844,11 @@ def main(argv: "Sequence[str] | None" = None) -> None:
                          "torn down and the chunk re-dispatched")
     ap.add_argument("--chunk-retries", type=int, default=2,
                     help="pool rebuilds before serial fallback")
+    ap.add_argument("--check", action="store_true",
+                    help="audit every emitted point with the independent "
+                         "legality checker (repro.core.verify): event-log "
+                         "invariants + static hazard lower bounds; exits "
+                         "nonzero on any violation")
     ap.add_argument("--front-only", action="store_true",
                     help="emit only Pareto-front rows (grid order kept); "
                          "pruned and exhaustive sweeps agree on this "
@@ -820,7 +873,8 @@ def main(argv: "Sequence[str] | None" = None) -> None:
                           margin=args.margin, faults=faults,
                           chunk_timeout=args.chunk_timeout,
                           chunk_retries=args.chunk_retries,
-                          verbose=args.verbose, stats=stats)
+                          verbose=args.verbose, check=args.check,
+                          stats=stats)
     t_sweep = time.perf_counter() - t0
 
     emit = pts
@@ -850,6 +904,11 @@ def main(argv: "Sequence[str] | None" = None) -> None:
         print(f"# expansion={design_space_expansion(banking, amm):.2f} "
               f"pareto_banked={len(pareto_front(banking))} "
               f"pareto_amm={len(pareto_front(amm))}")
+    if args.check:
+        # run_sweep_bench raised LegalityError before reaching here if
+        # any point violated a rule or a static bound
+        print(f"# legality: {len(pts)} points audited "
+              "(event-log invariants + static bounds), 0 violations")
     if cache:
         print(f"# cache: dir={cache.root} hits={cache.hits} "
               f"misses={cache.misses}")

@@ -47,8 +47,13 @@ from repro.core.dse.sweep import (DesignPoint, _BASE_FU, _MIN_CYCLE_NS,
                                   _spec_for)
 from repro.core.sim.arbiter import (KIND_BANKED, KIND_H_NTX,
                                     KIND_MULTIPUMP, KIND_REMAP,
-                                    _NTX_KINDS, compile_spec)
+                                    _NTX_KINDS, STALL_KEYS, compile_spec)
 from repro.core.sim.prepared import FU_ORDER, PreparedTrace, prepare_trace
+
+# conflict-feature column feeding each stall model, in STALL_KEYS order
+_STALL_FEATURES = ("sum_conf", "sum_top2", "sum_wr")
+assert len(_STALL_FEATURES) == len(STALL_KEYS), \
+    "a new STALL_KEYS entry needs a surrogate feature column here"
 
 # height-band width (cycles of schedule height per access-histogram bin)
 BAND_W = 8
@@ -97,6 +102,11 @@ class SurrogatePrediction:
     compute_term: float
     port_term: float
     interference_term: float
+
+
+assert all(f"{k}_stalls" in SurrogatePrediction.__dataclass_fields__
+           for k in STALL_KEYS), \
+    f"SurrogatePrediction is missing stall fields for STALL_KEYS={STALL_KEYS}"
 
 
 class TraceFeatures:
@@ -237,10 +247,8 @@ def _predict_from_features(feats: dict, kind: str) -> SurrogatePrediction:
             + p[3] * min(basemax, memraw) + p[4])
     interf = compute + C.INTF[kind] * max(0.0, feats["conf"]
                                           - 0.5 * basemax)
-    stalls = {f: C.STALL[f].get(kind, 0.0) * feats[x]
-              for f, x in (("bank_conflict_stalls", "sum_conf"),
-                           ("parity_fanout_stalls", "sum_top2"),
-                           ("write_pair_stalls", "sum_wr"))}
+    stalls = {f"{k}_stalls": C.STALL[f"{k}_stalls"].get(kind, 0.0) * feats[x]
+              for k, x in zip(STALL_KEYS, _STALL_FEATURES)}
     return SurrogatePrediction(
         cycles=max(compute, port, interf),
         compute_term=compute, port_term=port, interference_term=interf,

@@ -23,8 +23,14 @@ from repro.core.amm.spec import AMMSpec
 from repro.core.cost import (FU_AREA_MM2, FU_LEAK_MW, FU_POWER_MW,
                              memory_cost)
 from repro.core.sim import trace as T
+from repro.core.sim.arbiter import STALL_KEYS
 from repro.core.sim.prepared import PreparedTrace, prepare_trace
 from repro.core.sim.scheduler import ScheduleConfig, schedule
+
+# ScheduleResult / DSEPoint stall-field names, in STALL_KEYS order (the
+# scheduler's stall taxonomy is the single source of truth; the assert
+# under DSEPoint keeps this file from drifting when a key is added)
+_STALL_FIELDS = tuple(f"{k}_stalls" for k in STALL_KEYS)
 
 # base FU mix at unroll=1 (Aladdin constructs multi-issue ALUs by unrolling)
 _BASE_FU = {"fadd": 1, "fmul": 1, "fdiv": 1, "iadd": 2, "imul": 1,
@@ -114,11 +120,16 @@ class DSEPoint:
 
     @property
     def total_stalls(self) -> int:
-        return (self.bank_conflict_stalls + self.parity_fanout_stalls
-                + self.write_pair_stalls)
+        return sum(getattr(self, f) for f in _STALL_FIELDS)
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
+
+
+# the CSV schema (runner writes dataclasses.fields(DSEPoint)) must carry
+# exactly the scheduler's stall taxonomy — fail at import time on drift
+assert {f.name for f in dataclasses.fields(DSEPoint)} >= set(_STALL_FIELDS), \
+    f"DSEPoint is missing stall fields for STALL_KEYS={STALL_KEYS}"
 
 
 def _array_depths(tr: "T.Trace | PreparedTrace") -> dict[int, int]:
@@ -288,10 +299,8 @@ def point_from_schedule(
         time_us=time_us,
         area_mm2=area,
         power_mw=p_mem_dyn + p_leak + p_fu,
-        bank_conflict_stalls=res.bank_conflict_stalls,
-        parity_fanout_stalls=res.parity_fanout_stalls,
-        write_pair_stalls=res.write_pair_stalls,
         avg_mem_parallelism=res.avg_mem_parallelism,
+        **{f: getattr(res, f) for f in _STALL_FIELDS},
     )
 
 

@@ -1,13 +1,20 @@
-from repro.core.sim.arbiter import (ArbDescriptor, PortArbiter, compile_spec,
-                                    ntx_tables)
+from repro.core.sim.arbiter import (STALL_KEYS, ArbDescriptor, PortArbiter,
+                                    compile_spec, ntx_tables)
+from repro.core.sim.events import (PATH_BROADCAST, PATH_COMPUTE, PATH_DIRECT,
+                                   PATH_NAMES, PATH_PAIR_RMW, PATH_PARITY,
+                                   PATH_STEERED, EventLog)
 from repro.core.sim.prepared import (PreparedTrace, prepare_trace,
                                      trace_fingerprint)
-from repro.core.sim.scheduler import ScheduleConfig, ScheduleResult, schedule
+from repro.core.sim.scheduler import (ScheduleConfig, ScheduleResult,
+                                      schedule, schedule_events)
 from repro.core.sim.trace import (FADD, FDIV, FMUL, IADD, ICMP, IMUL, LOAD,
                                   LOGIC, STORE, Trace, TraceBuilder)
 
 __all__ = [
     "Trace", "TraceBuilder", "schedule", "ScheduleConfig", "ScheduleResult",
+    "schedule_events", "EventLog", "STALL_KEYS",
+    "PATH_COMPUTE", "PATH_DIRECT", "PATH_PARITY", "PATH_STEERED",
+    "PATH_PAIR_RMW", "PATH_BROADCAST", "PATH_NAMES",
     "ArbDescriptor", "PortArbiter", "compile_spec", "ntx_tables",
     "PreparedTrace", "prepare_trace", "trace_fingerprint",
     "LOAD", "STORE", "FADD", "FMUL", "FDIV", "IADD", "IMUL", "ICMP", "LOGIC",

@@ -9,6 +9,10 @@ loop — results are identical either way (golden regression tests pin
 both paths).
 
 Set ``REPRO_PURE_PY=1`` to force the Python loop.
+
+``build_library(defines=...)`` exposes the compile step for tooling
+that needs a variant build (``tools/measure_check_overhead.py``
+compiles a ``-DREPRO_NO_EVENTS`` twin to price the event-logging hook).
 """
 from __future__ import annotations
 
@@ -28,6 +32,52 @@ def _cache_dir() -> str:
     return os.path.join(os.path.expanduser("~"), ".cache", "repro")
 
 
+def build_library(defines: "tuple[str, ...]" = ()) -> str:
+    """Compile ``_cycle_loop.c`` (with optional ``-D`` defines) and
+    return the cached shared-object path.  Raises on any failure."""
+    import hashlib
+    import platform
+
+    with open(_SRC, "rb") as f:
+        src = f.read()
+    tag = hashlib.sha256(src + repr(sorted(defines)).encode()
+                         ).hexdigest()[:16]
+    cache = _cache_dir()
+    os.makedirs(cache, exist_ok=True)
+    so = os.path.join(cache, f"cycle_loop-{tag}-{platform.machine()}.so")
+    if not os.path.exists(so):
+        import subprocess
+
+        tmp = f"{so}.{os.getpid()}.tmp.so"
+        cc = os.environ.get("CC", "cc")
+        cmd = [cc, "-O2", "-shared", "-fPIC"]
+        cmd += [f"-D{d}" for d in defines]
+        cmd += ["-o", tmp, _SRC]
+        subprocess.run(cmd, check=True, capture_output=True, timeout=120)
+        os.replace(tmp, so)
+    return so
+
+
+def bind_run_schedule(lib):
+    """Attach argtypes/restype to a CDLL's ``run_schedule`` and return it."""
+    import ctypes
+
+    i64 = ctypes.c_longlong
+    i64p = ctypes.POINTER(i64)
+    u8p = ctypes.POINTER(ctypes.c_ubyte)
+    fn = lib.run_schedule
+    fn.restype = i64
+    fn.argtypes = (
+        [i64, i64, i64]                # n, n_arrays, n_classes
+        + [i64p] * 4                   # succ_ptr, succ_idx, indegree, height
+        + [u8p, i64p, i64p, i64p]      # is_load, node_lat, word_idx, klass_id
+        + [i64p, i64p]                 # fu_budgets, desc matrix
+        + [i64, i64, i64, i64p]        # mem_latency, ports_per_bank,
+                                       #   max_cycles, out
+        + [i64p])                      # events (NULL to disable logging)
+    return fn
+
+
 def load():
     """Return the compiled ``run_schedule`` or ``None`` if unavailable."""
     global _FN, _ANALYZE, _BATCH, _TRIED
@@ -38,36 +88,13 @@ def load():
         return None
     try:
         import ctypes
-        import hashlib
-        import platform
 
-        with open(_SRC, "rb") as f:
-            src = f.read()
-        key = hashlib.sha256(src).hexdigest()[:16]
-        cache = _cache_dir()
-        os.makedirs(cache, exist_ok=True)
-        so = os.path.join(cache, f"cycle_loop-{key}-{platform.machine()}.so")
-        if not os.path.exists(so):
-            import subprocess
-
-            tmp = f"{so}.{os.getpid()}.tmp.so"
-            cc = os.environ.get("CC", "cc")
-            subprocess.run(
-                [cc, "-O2", "-shared", "-fPIC", "-o", tmp, _SRC],
-                check=True, capture_output=True, timeout=120)
-            os.replace(tmp, so)
+        so = build_library()
         i64 = ctypes.c_longlong
         i64p = ctypes.POINTER(i64)
         u8p = ctypes.POINTER(ctypes.c_ubyte)
         lib = ctypes.CDLL(so)
-        fn = lib.run_schedule
-        fn.restype = i64
-        fn.argtypes = (
-            [i64, i64, i64]                # n, n_arrays, n_classes
-            + [i64p] * 4                   # succ_ptr, succ_idx, indegree, height
-            + [u8p, i64p, i64p, i64p]      # is_load, node_lat, word_idx, klass_id
-            + [i64p, i64p]                 # fu_budgets, desc matrix
-            + [i64, i64, i64, i64p])       # mem_latency, ports_per_bank, max_cycles, out
+        fn = bind_run_schedule(lib)
         an = lib.analyze_graph
         an.restype = None
         an.argtypes = [i64] + [i64p] * 7

@@ -36,6 +36,25 @@ enum { F_KIND = 0, F_RD, F_WR, F_SLOTS, F_NBANKS, F_DEPTH, F_LEVELS,
        F_HALF, F_SUB, F_MAXFAIL, F_CONFIGURED, F_NLEAVES, F_TREE_DEPTH,
        N_FIELDS };
 
+/* issue-event path kinds: keep in sync with repro/core/sim/events.py */
+enum { P_COMPUTE = 0, P_DIRECT = 1, P_PARITY = 2, P_STEERED = 3,
+       P_PAIR = 4, P_BCAST = 5 };
+
+/* Record one issue event into the caller's optional [n * 4] buffer
+ * (cycle, path, resource, slot per node).  `events` may be NULL —
+ * the common case — and the whole mechanism can be compiled away with
+ * -DREPRO_NO_EVENTS for overhead measurement (tools/
+ * measure_check_overhead.py).  Recording happens strictly after the
+ * issue decision and touches no scheduler state. */
+#ifndef REPRO_NO_EVENTS
+#define EV_REC(nd, p, r, s) do { if (events) { \
+        i64 *e_ = events + 4 * (nd); \
+        e_[0] = cycle; e_[1] = (p); e_[2] = (r); e_[3] = (s); \
+    } } while (0)
+#else
+#define EV_REC(nd, p, r, s) ((void)0)
+#endif
+
 #define MAX_LEVELS 32
 #define MAX_PATHS 128          /* _schedule_c falls back to Python beyond */
 
@@ -150,11 +169,13 @@ i64 run_schedule(
     const i64 *fu_budgets,          /* [n_classes - n_arrays] */
     const i64 *desc,                /* [n_arrays * N_FIELDS] */
     i64 mem_latency, i64 ports_per_bank, i64 max_cycles,
-    i64 *out)   /* [9 + n_arrays]: cycles, issued, mem_issued,
+    i64 *out,   /* [9 + n_arrays]: cycles, issued, mem_issued,
                    bank_stalls, mem_cycles_used, parity_stalls,
                    pair_stalls, parity_reads, pair_rmws, per_array... */
+    i64 *events) /* NULL, or [n * 4] (cycle, path, resource, slot) */
 {
     i64 rc = -4;
+    (void)events;
     i64 *npreds = NULL, *prio = NULL, *coff = NULL, *hsz = NULL;
     i64 *harena = NULL, *inflight = NULL, *deferred = NULL;
     i64 *bank_use = NULL, *touched = NULL, *per_array = NULL;
@@ -251,12 +272,14 @@ i64 run_schedule(
             if (hsz[c] == 0) continue;
             i64 *heap = &harena[coff[c]];
             if (c >= n_arrays) {
-                i64 budget = fu_budgets[c - n_arrays];
+                i64 fub = fu_budgets[c - n_arrays];
+                i64 budget = fub;
                 while (hsz[c] > 0 && budget > 0) {
                     i64 node = node_of(heap_pop(heap, &hsz[c]), n);
                     heap_push(inflight, &inflight_sz,
                               (cycle + node_lat[node]) * n + node);
                     issued++;
+                    EV_REC(node, P_COMPUTE, -1, fub - budget);
                     budget--;
                 }
             } else {
@@ -267,6 +290,7 @@ i64 run_schedule(
                 i64 maxf = dsc[F_MAXFAIL];
                 i64 nd = 0, failed = 0;
 
+                i64 mslot = 0;     /* per-class issue ordinal this cycle */
                 if (kind == K_BANKED) {
                     /* seed-exact banked serialization */
                     i64 nb = dsc[F_NBANKS];
@@ -303,6 +327,8 @@ i64 run_schedule(
                         heap_push(inflight, &inflight_sz,
                                   (cycle + lat) * n + node);
                         issued++; mem_issued++; any_mem++; per_array[c]++;
+                        EV_REC(node, P_DIRECT, bank, mslot);
+                        mslot++;
                         if (ld) rd--; else wr--;
                     }
                     for (i64 t = 0; t < ntouch; t++) bank_use[touched[t]] = 0;
@@ -328,6 +354,10 @@ i64 run_schedule(
                         heap_push(inflight, &inflight_sz,
                                   (cycle + lat) * n + node);
                         issued++; mem_issued++; any_mem++; per_array[c]++;
+                        EV_REC(node,
+                               (!ld && kind == K_LVT) ? P_BCAST : P_DIRECT,
+                               -1, mslot);
+                        mslot++;
                         slots--;
                         if (ld) rd--; else wr--;
                     }
@@ -347,6 +377,7 @@ i64 run_schedule(
                             deferred[nd++] = item; failed++; continue;
                         }
                         i64 a = word_idx[node] % dep;
+                        i64 pth, resv;
                         if (ld) {
                             i64 bank = map[a];
                             if (bank_use[bank] >= ports_per_bank) {
@@ -358,6 +389,7 @@ i64 run_schedule(
                                 continue;
                             }
                             bank_use[bank]++;
+                            pth = P_DIRECT; resv = bank;
                         } else {
                             i64 chosen = -1, start = map[a];
                             for (i64 i = 0; i < nb; i++) {
@@ -379,11 +411,14 @@ i64 run_schedule(
                             wr_used[chosen] = 1;
                             bank_use[chosen]++;
                             map[a] = chosen;
+                            pth = P_STEERED; resv = chosen;
                         }
                         i64 lat = ld ? mem_latency : node_lat[node];
                         heap_push(inflight, &inflight_sz,
                                   (cycle + lat) * n + node);
                         issued++; mem_issued++; any_mem++; per_array[c]++;
+                        EV_REC(node, pth, resv, mslot);
+                        mslot++;
                         if (ld) rd--; else wr--;
                     }
                     memset(bank_use, 0, (size_t)nb * sizeof(i64));
@@ -415,6 +450,7 @@ i64 run_schedule(
                             tree = a >= half;
                             ta = a - (tree ? half : 0);
                         }
+                        i64 pth = P_DIRECT, resv = -1;
                         int ok = 1;
                         if (!ld) {
                             if (kind == K_H_NTX) {
@@ -437,6 +473,7 @@ i64 run_schedule(
                                     pair_used = 1;
                                     wr_half[tree]++;
                                     pair_rmws++;
+                                    pth = P_PAIR;
                                 }
                             }
                             if (!ok) {
@@ -459,6 +496,7 @@ i64 run_schedule(
                                 if (want_ref) {
                                     leaf_use[kr] = 1; touched[ntouch++] = kr;
                                 }
+                                resv = kd;
                             } else {
                                 /* parity path: every leaf must be free */
                                 ntx_parity(k, bits, pleaf);
@@ -484,6 +522,7 @@ i64 run_schedule(
                                         }
                                     }
                                     parity_reads++;
+                                    pth = P_PARITY;
                                 } else {
                                     deferred[nd++] = item;
                                     if (!delayed[node]) {
@@ -498,6 +537,8 @@ i64 run_schedule(
                         heap_push(inflight, &inflight_sz,
                                   (cycle + lat) * n + node);
                         issued++; mem_issued++; any_mem++; per_array[c]++;
+                        EV_REC(node, pth, resv, mslot);
+                        mslot++;
                         if (ld) rd--; else wr--;
                     }
                     for (i64 t = 0; t < ntouch; t++) leaf_use[touched[t]] = 0;
@@ -599,7 +640,7 @@ i64 run_schedule_batch(
             fu_budgets_all + c * n_fu,
             desc_all + (size_t)c * n_arrays * N_FIELDS,
             mem_latency_all[c], ports_per_bank, budget,
-            out_all + c * out_stride);
+            out_all + c * out_stride, NULL);
         if (rc == -1 && budget < max_cycles) {
             status_all[c] = 1;                 /* front-capped */
         } else {

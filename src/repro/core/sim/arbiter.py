@@ -98,6 +98,15 @@ N_FIELDS = 13
 STALL_NONE, STALL_BANK, STALL_PARITY, STALL_PAIR = 0, 1, 2, 3
 EV_NONE, EV_PARITY_READ, EV_PAIR_RMW = 0, 1, 2
 
+# The canonical stall taxonomy, in STALL_BANK/STALL_PARITY/STALL_PAIR
+# order.  Every consumer — ``ScheduleResult.stall_breakdown``, the C and
+# JAX backend wrappers, the DSE CSV schema, the surrogate feature lists
+# and the legality checker's violation classes — derives its key set
+# from this tuple; the per-backend re-declarations it replaces drifted
+# once already.
+STALL_KEYS: tuple[str, ...] = ("bank_conflict", "parity_fanout",
+                               "write_pair")
+
 
 @dataclasses.dataclass(frozen=True)
 class ArbDescriptor:
@@ -256,6 +265,12 @@ class PortArbiter:
         self.write_pair_rmws = 0
         self._wr_half = [0, 0]
         self._pair_used = 0
+        # resource touched by the last successful access: the direct
+        # leaf-port key for NTX direct reads, the live/steered bank for
+        # remap, -1 where the access has no single resource (parity
+        # fan-outs, pair RMWs, plain writes).  Consumed by the
+        # event-log recording path in the scheduler.
+        self.last_res = -1
 
     # -- cycle lifecycle ------------------------------------------------
     def begin_cycle(self) -> None:
@@ -292,6 +307,7 @@ class PortArbiter:
             tree = 1 if a >= d.half else 0
             ta = a - (d.half if tree else 0)
         if not is_load:
+            self.last_res = -1
             if d.kind == KIND_H_NTX:
                 return True, STALL_NONE, EV_NONE     # single dedicated port
             if self._wr_half[tree] == 0:
@@ -319,7 +335,9 @@ class PortArbiter:
             keys.append(self._key(2, leaf, s))
         if all(k not in self._use for k in keys):
             self._use.update(keys)
+            self.last_res = keys[0]
             return True, STALL_NONE, EV_NONE
+        self.last_res = -1
         pkeys = []
         for pl in self.parity[ta]:
             pkeys.append(self._key(tree, int(pl), s))
@@ -340,6 +358,7 @@ class PortArbiter:
             if self._ruse[bank] >= ppb:
                 return False, STALL_BANK, EV_NONE
             self._ruse[bank] += 1
+            self.last_res = bank
             return True, STALL_NONE, EV_NONE
         start = self.map[a]
         for i in range(nb):
@@ -348,6 +367,7 @@ class PortArbiter:
                 self._wuse[b] = 1
                 self._ruse[b] += 1
                 self.map[a] = b
+                self.last_res = b
                 return True, STALL_NONE, EV_NONE
         return False, STALL_BANK, EV_NONE
 

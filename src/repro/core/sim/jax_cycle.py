@@ -46,11 +46,15 @@ from jax import lax
 from repro.core.sim.arbiter import (F_CONFIGURED, F_DEPTH, F_HALF, F_KIND,
                                     F_LEVELS, F_MAXFAIL, F_NBANKS, F_NLEAVES,
                                     F_RD, F_SLOTS, F_SUB, F_WR, KIND_BANKED,
-                                    KIND_H_NTX, KIND_REMAP, N_FIELDS,
-                                    STALL_BANK, STALL_PAIR, STALL_PARITY,
-                                    _NTX_KINDS, compile_descriptors,
+                                    KIND_H_NTX, KIND_LVT, KIND_REMAP,
+                                    N_FIELDS, STALL_BANK, STALL_KEYS,
+                                    STALL_PAIR, STALL_PARITY, _NTX_KINDS,
+                                    compile_descriptors,
                                     descriptor_device_tables,
                                     descriptor_matrix, device_limits)
+from repro.core.sim.events import (PATH_BROADCAST, PATH_COMPUTE, PATH_DIRECT,
+                                   PATH_PAIR_RMW, PATH_PARITY, PATH_STEERED,
+                                   EventLog)
 from repro.core.sim.prepared import (FU_ORDER, PreparedTrace, _next_pow2,
                                      prepare_trace)
 
@@ -123,8 +127,15 @@ def remap_write_step(live_map, ruse, wuse, addr, n_banks: int, ppb: int):
     return ok, jnp.where(ok, bank, -1), live_map, ruse, wuse
 
 
-def _make_lane_fn(sc: StaticCfg):
+def _make_lane_fn(sc: StaticCfg, record: bool = False):
     """Single-design cycle loop for one trace shape (vmapped by caller).
+
+    With ``record=True`` the carry grows four ``(NPAD + 2,)`` int32
+    event arrays (cycle / path / resource / slot per node, the
+    :mod:`repro.core.sim.events` log) written through the same
+    trash-slot scatters the schedule state already uses, and the lane
+    returns a fifth ``[4, NPAD]`` output.  The default lane is
+    byte-identical to before — recording costs nothing when off.
 
     The per-cycle issue phase is two fused stages instead of a Python
     loop over resource classes: one segmented cumulative-rank pass over
@@ -154,6 +165,7 @@ def _make_lane_fn(sc: StaticCfg):
             [jnp.zeros((A,), I32), fu_budgets.astype(I32),
              jnp.zeros((1,), I32)])        # mem / FU / pad segment budgets
         kind = desc[:, F_KIND]
+        is_lvt = kind == KIND_LVT
         configured = desc[:, F_CONFIGURED] > 0
         n_banks = jnp.maximum(desc[:, F_NBANKS], 1)
         depth = jnp.maximum(desc[:, F_DEPTH], 1)
@@ -181,7 +193,9 @@ def _make_lane_fn(sc: StaticCfg):
 
         def body(c):
             (cycle, remaining, finish, issued, delayed, maps, cnt,
-             per_array, err) = c
+             per_array, err) = c[:9]
+            if record:
+                ev_cycle, ev_path, ev_res, ev_slot = c[9:]
             err = jnp.where((err == ERR_NONE) & (cycle > max_cycles),
                             jnp.int32(ERR_MAX_CYCLES), err)
             # ---- retire: a node is retired once issued & finish <= cycle
@@ -201,6 +215,10 @@ def _make_lane_fn(sc: StaticCfg):
             tgt = jnp.where(take, perm, TRASH)
             finish = finish.at[tgt].set(cycle + lat_p)
             issued = issued.at[tgt].set(True)
+            if record:
+                ev_cycle = ev_cycle.at[tgt].set(cycle)
+                ev_path = ev_path.at[tgt].set(jnp.int32(PATH_COMPUTE))
+                ev_slot = ev_slot.at[tgt].set((rank - 1).astype(I32))
             fu_issue_n = jnp.sum(take, dtype=I32)
 
             # ---- memory classes: segmented prefix -> per-array scan slots
@@ -225,7 +243,9 @@ def _make_lane_fn(sc: StaticCfg):
             def istep(st):
                 (j, rd, wr, slots, failed, saturated, stop, pair_used,
                  wr_half, ruse, wuse, use, amap, finish, issued, delayed,
-                 mem_pa, conflict_n, parity_n, pair_n, pr_n, rmw_n) = st
+                 mem_pa, conflict_n, parity_n, pair_n, pr_n, rmw_n) = st[:22]
+                if record:
+                    ev_cycle, ev_path, ev_res, ev_slot = st[22:]
                 act = ((j < ncand) & ~stop & configured
                        & _top(rd, wr, slots, failed, saturated))
                 node = lax.dynamic_index_in_dim(cand, j, axis=1,
@@ -319,6 +339,25 @@ def _make_lane_fn(sc: StaticCfg):
                 tgt = jnp.where(issue, node, TRASH)
                 finish = finish.at[tgt].set(cycle + latv)
                 issued = issued.at[tgt].set(True)
+                if record:
+                    # path kind / resource / slot of each issue, exactly
+                    # the reference loops' recording rules (events.py)
+                    pathv = jnp.where(
+                        rd_parity, PATH_PARITY,
+                        jnp.where(w_pair, PATH_PAIR_RMW,
+                                  jnp.where(rm_wr, PATH_STEERED,
+                                            jnp.where(issue & ~ld & is_lvt,
+                                                      PATH_BROADCAST,
+                                                      PATH_DIRECT))))
+                    resv = jnp.where(
+                        bsel, bankb,
+                        jnp.where(rm_rd, mb,
+                                  jnp.where(rm_wr, wbank,
+                                            jnp.where(rd_direct, key1, -1))))
+                    ev_cycle = ev_cycle.at[tgt].set(cycle)
+                    ev_path = ev_path.at[tgt].set(pathv.astype(I32))
+                    ev_res = ev_res.at[tgt].set(resv.astype(I32))
+                    ev_slot = ev_slot.at[tgt].set(mem_pa)
                 first = defer & ~delayed[node]
                 delayed = delayed.at[jnp.where(first, node, TRASH)].set(True)
                 mem_pa = mem_pa + issue.astype(I32)
@@ -330,10 +369,13 @@ def _make_lane_fn(sc: StaticCfg):
                     first & (cause == STALL_PAIR), dtype=I32)
                 pr_n = pr_n + jnp.sum(rd_parity, dtype=I32)
                 rmw_n = rmw_n + jnp.sum(w_pair, dtype=I32)
-                return (j + 1, rd, wr, slots, failed, saturated, stop,
-                        pair_used, wr_half, ruse, wuse, use, amap, finish,
-                        issued, delayed, mem_pa, conflict_n, parity_n,
-                        pair_n, pr_n, rmw_n)
+                nxt = (j + 1, rd, wr, slots, failed, saturated, stop,
+                       pair_used, wr_half, ruse, wuse, use, amap, finish,
+                       issued, delayed, mem_pa, conflict_n, parity_n,
+                       pair_n, pr_n, rmw_n)
+                if record:
+                    nxt = nxt + (ev_cycle, ev_path, ev_res, ev_slot)
+                return nxt
 
             zA = jnp.zeros((A,), I32)
             z = jnp.int32(0)
@@ -345,10 +387,14 @@ def _make_lane_fn(sc: StaticCfg):
                    jnp.zeros((A, NB + 1), I32), jnp.zeros((A, NB + 1), I32),
                    jnp.zeros((A, U + 1), bool), maps, finish, issued,
                    delayed, zA, z, z, z, z, z)
+            if record:
+                st0 = st0 + (ev_cycle, ev_path, ev_res, ev_slot)
             st = lax.while_loop(icond, istep, st0)
             maps, finish, issued, delayed = st[12:16]
             mem_pa, conflict_add, parity_add, pair_add, pr_add, rmw_add = \
                 st[16:22]
+            if record:
+                ev_cycle, ev_path, ev_res, ev_slot = st[22:]
             mem_add = jnp.sum(mem_pa, dtype=I32)
             per_array = per_array + mem_pa
             any_mem = (mem_add > 0).astype(I32)
@@ -371,8 +417,11 @@ def _make_lane_fn(sc: StaticCfg):
             cnt = cnt + jnp.stack(
                 [fu_issue_n + mem_add, mem_add, conflict_add, parity_add,
                  pair_add, pr_add, rmw_add, any_mem])
-            return (ncycle, remaining, finish, issued, delayed, maps, cnt,
-                    per_array, err)
+            nxt = (ncycle, remaining, finish, issued, delayed, maps, cnt,
+                   per_array, err)
+            if record:
+                nxt = nxt + (ev_cycle, ev_path, ev_res, ev_slot)
+            return nxt
 
         finish0 = jnp.concatenate([
             jnp.full((NPAD,), _INT32_INF, I32),
@@ -381,20 +430,26 @@ def _make_lane_fn(sc: StaticCfg):
                   jnp.zeros((NPAD + 2,), bool), jnp.zeros((NPAD + 2,), bool),
                   jnp.zeros((A, D + 1), I32), jnp.zeros((8,), I32),
                   jnp.zeros((A,), I32), jnp.int32(ERR_NONE))
+        if record:
+            carry0 = carry0 + tuple(
+                jnp.full((NPAD + 2,), -1, I32) for _ in range(4))
 
         def cond(c):
             return (c[1] > 0) & (c[8] == ERR_NONE)
 
         out = lax.while_loop(cond, body, carry0)
-        cycle, _, _, _, _, maps, cnt, per_array, err = out
+        cycle, _, _, _, _, maps, cnt, per_array, err = out[:9]
+        if record:
+            events = jnp.stack([e[:NPAD] for e in out[9:]])
+            return cycle, cnt, per_array, err, maps[:, :D], events
         return cycle, cnt, per_array, err, maps[:, :D]
 
     return lane
 
 
 @lru_cache(maxsize=32)
-def _compiled(sc: StaticCfg):
-    lane = _make_lane_fn(sc)
+def _compiled(sc: StaticCfg, record: bool = False):
+    lane = _make_lane_fn(sc, record)
     return jax.jit(jax.vmap(lane, in_axes=(0,) * 8 + (None,) * 8))
 
 
@@ -411,6 +466,7 @@ def schedule_batched(
     cfgs: "Sequence[ScheduleConfig]",
     *,
     return_maps: bool = False,
+    collect_events: bool = False,
 ):
     """Run the cycle-accurate scheduler for many designs in one jit call.
 
@@ -420,7 +476,10 @@ def schedule_batched(
     ``cfgs`` order — each element exactly equal to what
     ``scheduler.schedule`` computes for that config.  With
     ``return_maps=True`` also returns the final remap live maps
-    ``[batch, n_arrays, table_depth]`` (property-test hook).
+    ``[batch, n_arrays, table_depth]`` (property-test hook).  With
+    ``collect_events=True`` the recording kernel variant runs instead
+    and a list of per-config :class:`~repro.core.sim.events.EventLog`
+    is appended to the return tuple (bit-equal to the py/C logs).
     """
     from repro.core.sim.scheduler import ScheduleResult
 
@@ -428,7 +487,12 @@ def schedule_batched(
     dv = pt.device_views()
     cfgs = list(cfgs)
     if not cfgs:
-        return ([], np.zeros((0, 0, 0), np.int32)) if return_maps else []
+        empty: tuple = ([],)
+        if return_maps:
+            empty = empty + (np.zeros((0, 0, 0), np.int32),)
+        if collect_events:
+            empty = empty + ([],)
+        return empty if len(empty) > 1 else empty[0]
 
     all_descs = [compile_descriptors(c.mem, pt.n_arrays, c.ports_per_bank)
                  for c in cfgs]
@@ -458,11 +522,13 @@ def schedule_batched(
         ppb[b] = cfg.ports_per_bank
         max_cycles[b] = min(cfg.max_cycles, int(_INT32_INF) - 64)
 
-    cycles, cnt, per_array, err, maps = _compiled(sc)(
+    lane_out = _compiled(sc, collect_events)(
         desc, fu_budgets, mem_latency, ppb, max_cycles,
         direct, offset, parity,
         np.int32(dv.n_real), dv.preds_pad, dv.lat, dv.is_load,
         dv.word_idx, dv.perm, dv.gid_perm, dv.seg_start)
+    cycles, cnt, per_array, err, maps = lane_out[:5]
+    ev_dev = np.asarray(lane_out[5]) if collect_events else None
     cycles = np.asarray(cycles)
     cnt = np.asarray(cnt)
     per_array = np.asarray(per_array)
@@ -485,9 +551,8 @@ def schedule_batched(
             cycles=int(cycles[b]),
             issued=int(cnt[b, 0]),
             mem_issued=int(cnt[b, 1]),
-            bank_conflict_stalls=int(cnt[b, 2]),
-            parity_fanout_stalls=int(cnt[b, 3]),
-            write_pair_stalls=int(cnt[b, 4]),
+            **{f"{k}_stalls": int(cnt[b, i])
+               for k, i in zip(STALL_KEYS, (2, 3, 4))},
             parity_path_reads=int(cnt[b, 5]),
             write_pair_rmws=int(cnt[b, 6]),
             per_array_accesses={a: int(per_array[b, a]) for a in names},
@@ -495,9 +560,17 @@ def schedule_batched(
         )
         for b in range(len(cfgs))
     ]
+    ret: tuple = (results,)
     if return_maps:
-        return results, np.asarray(maps)
-    return results
+        ret = ret + (np.asarray(maps),)
+    if collect_events:
+        n = pt.trace.n_nodes
+        ret = ret + ([EventLog(cycle=ev_dev[b, 0, :n].astype(np.int64),
+                               path=ev_dev[b, 1, :n].astype(np.int64),
+                               resource=ev_dev[b, 2, :n].astype(np.int64),
+                               slot=ev_dev[b, 3, :n].astype(np.int64))
+                      for b in range(len(cfgs))],)
+    return ret if len(ret) > 1 else ret[0]
 
 
 def schedule_jax(tr: "Trace | PreparedTrace",

