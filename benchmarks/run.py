@@ -3,12 +3,14 @@ microbenchmarks.  Prints ``name,us_per_call,derived`` CSV rows.
 
   fig4_dse          — area-cycles / power-cycles DSE per benchmark (Fig 4)
   fig5_locality     — spatial locality + performance ratio (Fig 5)
+  serving_dse       — LLM-serving traces (KV decode / paged KV / MoE
+                      routing): full-grid sweep + AMM kind ranking
   tab_synthesis     — AMM design cost table (Sec III-A synthesis results)
   kernel_microbench — blocked kernels: interpret vs compiled rows
                       (--interpret/--compiled restrict to one mode)
   scheduler_microbench — C cycle loop vs pure-Python fallback (large trace)
   scheduler_batched — batched JAX grid vs per-point C / python loops
-  dse_matrix        — full 12x13 DSE matrix: exhaustive C vs
+  dse_matrix        — full 15x13 DSE matrix: exhaustive C vs
                       surrogate-pruned batched-C vs warm cache
   fault_campaign    — seeded fault-injection campaigns per design kind
                       (SDC rate / corrected / detected fractions)
@@ -101,7 +103,8 @@ def fig4_dse() -> None:
 
 def fig5_locality() -> None:
     """Paper Fig 5: spatial locality vs AMM performance ratio over the
-    full 12-benchmark suite, summarized by Spearman rank correlation
+    full 15-benchmark suite (12 MachSuite-style kernels + the 3
+    LLM-serving traces), summarized by Spearman rank correlation
     (the paper's claim holds when the ratio *decreases* with locality,
     i.e. rho < 0).  Writes ``fig5.csv`` under ``--artifact-dir``.
 
@@ -160,6 +163,50 @@ def fig5_locality() -> None:
         # readers would ingest it as a row); the rho summary lives in
         # the stdout rows / --json output
         print(f"# wrote {path} (spearman_rho={rho:.4f})", file=sys.stderr)
+
+
+def serving_dse() -> None:
+    """LLM-serving workload family: full-grid DSE over the three
+    serving traces (batched mixed-length KV decode, paged-KV gather
+    with block-table indirection, MoE top-k routing) and a ranking of
+    every AMM kind family by its fastest point on each bench.
+
+    Unlike the other DSE tables this one always sweeps the *full*
+    20-design grid — the smoke stride would drop the ``b_ntx_wr`` kind
+    and the sub-banked ``*-b4`` points, and the whole point of the
+    table is a complete kind ranking (smoke runs thin the unroll axis
+    instead; ``--full`` also switches to full-size traces).
+    """
+    from repro.core.bench import SERVING, get_trace
+    from repro.core.dse import (DEFAULT_DESIGNS, design_space_expansion,
+                                pareto_front, run_sweep)
+    from repro.core.sim import prepare_trace
+
+    unrolls = (1, 2, 4, 8) if FULL else (2, 8)
+    kind_of = {d.label: d.kind for d in DEFAULT_DESIGNS}
+    for name in SERVING:
+        tr = get_trace(name, full=FULL)
+        pt = prepare_trace(tr)
+        t0 = time.perf_counter()
+        pts = run_sweep(pt, DEFAULT_DESIGNS, unrolls, jobs=JOBS,
+                        cache_dir=CACHE_DIR, backend=BACKEND)
+        dt = (time.perf_counter() - t0) * 1e6
+        banking = [p for p in pts if not p.is_amm]
+        amm = [p for p in pts if p.is_amm]
+        fastest: dict[str, float] = {}
+        for p in pts:
+            k = kind_of[p.design]
+            fastest[k] = min(fastest.get(k, float("inf")), p.time_us)
+        ranking = ">".join(sorted(fastest, key=fastest.get))
+        exp = design_space_expansion(banking, amm)
+        _row(f"serving_dse.{name}", dt,
+             f"L_spatial={pt.locality:.3f};points={len(pts)};"
+             f"kinds={len(fastest)};ranking={ranking};"
+             f"winner={min(pts, key=lambda p: p.time_us).design};"
+             f"fastest_banked_us={min(p.time_us for p in banking):.2f};"
+             f"fastest_amm_us={min(p.time_us for p in amm):.2f};"
+             f"expansion={exp:.2f};"
+             f"pareto_amm={len(pareto_front(amm))}")
 
 
 def tab_synthesis() -> None:
@@ -438,12 +485,13 @@ def scheduler_batched() -> None:
 
 
 def dse_matrix() -> None:
-    """Full 12-bench x 13-design x 4-unroll DSE matrix three ways:
+    """Full 15-bench x 13-design x 4-unroll DSE matrix three ways:
     exhaustive per-point C sweep, surrogate-pruned batched-C sweep
-    (band prune + in-C Pareto front caps) and the fully-warm on-disk
-    cache (manifest fast path, trace generation skipped).  The unroll
-    axis is the default sweep grid (1/2/4/8), the design axis the
-    13-design calibration matrix.
+    (band prune + in-C Pareto front caps; uncalibrated serving traces
+    fall back to exhaustive inside run_sweep) and the fully-warm
+    on-disk cache (manifest fast path, trace generation skipped).  The
+    unroll axis is the default sweep grid (1/2/4/8), the design axis
+    the 13-design calibration matrix.
 
     Traces are generated and prepared in a prepass so the timed legs
     measure sweep compute only; the surrogate leg *does* pay for its
@@ -610,6 +658,7 @@ def grad_sync_bench() -> None:
 TABLES = {
     "fig4_dse": fig4_dse,
     "fig5_locality": fig5_locality,
+    "serving_dse": serving_dse,
     "tab_synthesis": tab_synthesis,
     "kernel_microbench": kernel_microbench,
     "amm_replay": amm_replay,

@@ -1,4 +1,4 @@
-"""MachSuite-like benchmark registry (paper III-B / IV-A).
+"""Benchmark registry (paper III-B / IV-A + the serving extension).
 
 Each module provides: ``Params`` (+ ``TINY``), ``gen_trace(params)`` and
 a runnable JAX implementation.  The four discussion benchmarks of the
@@ -7,6 +7,13 @@ stencil2d and aes widen the locality spread for the Fig-5 analysis, and
 the irregular MachSuite kernels — spmv_crs, bfs_queue, nw, viterbi,
 radix_sort — populate its low/mid-locality end (sparse gathers, graph
 traversal, DP wavefronts, backpointer chases, counting scatters).
+
+The ``SERVING`` triple extends the suite past MachSuite to the
+LLM-inference access patterns the ROADMAP north star cares about:
+batched mixed-length KV-cache decode (kv_decode), paged-attention
+block-table gather (paged_kv) and MoE top-k expert routing (moe_route)
+— the low-locality, gather/scatter-heavy workload family the paper's
+Fig-5 claim predicts AMMs should win on.
 
 ``get_trace`` is the preferred entry point: trace generation is pure in
 the benchmark parameters, so generated traces are memoized at module
@@ -24,7 +31,8 @@ from collections.abc import Mapping
 
 _BENCH_NAMES = ("fft_strided", "gemm_ncubed", "kmp", "md_knn",
                 "sort_merge", "stencil2d", "aes",
-                "spmv_crs", "bfs_queue", "nw", "viterbi", "radix_sort")
+                "spmv_crs", "bfs_queue", "nw", "viterbi", "radix_sort",
+                "kv_decode", "paged_kv", "moe_route")
 
 
 class _LazyRegistry(Mapping):
@@ -50,6 +58,10 @@ class _LazyRegistry(Mapping):
 BENCHMARKS = _LazyRegistry()
 
 PAPER_FIG4 = ("fft_strided", "gemm_ncubed", "kmp", "md_knn")
+
+# the LLM-serving workload family (ROADMAP: the millions-of-users
+# scenario the MachSuite set never covered)
+SERVING = ("kv_decode", "paged_kv", "moe_route")
 
 _TRACE_MEMO: dict = {}
 
@@ -170,4 +182,5 @@ def get_trace(name: str, params=None, *, full: bool = False):
     return _TRACE_MEMO[key]
 
 
-__all__ = ["BENCHMARKS", "PAPER_FIG4", "get_trace", "trace_cache_key"]
+__all__ = ["BENCHMARKS", "PAPER_FIG4", "SERVING", "get_trace",
+           "trace_cache_key"]

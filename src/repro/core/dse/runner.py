@@ -607,8 +607,11 @@ def run_sweep(
         designs-major *subsequence* of the grid that still contains the
         exact time/area Pareto front; points it does return are bitwise
         identical to the exhaustive sweep (and share its cache entries).
-        The surrogate is calibrated at ``mem_latency == 2``; other
-        latencies fall back to the exhaustive sweep.  The pruned path
+        The surrogate is calibrated at ``mem_latency == 2`` on the
+        MachSuite trace families (``surrogate.CALIBRATED_BENCHES``);
+        other latencies and uncalibrated trace families (e.g. the
+        LLM-serving benches) fall back to the exhaustive sweep.  The
+        pruned path
         evaluates through the batched C scheduler, ignoring ``jobs``
         and ``backend``.
       margin: safety slack on predicted time for the surrogate band
@@ -645,18 +648,26 @@ def run_sweep(
         cache = _resolve_cache(cache_dir)
 
     if prune == "surrogate":
-        from repro.core.dse.surrogate import CALIBRATED_MEM_LATENCY
+        from repro.core.dse.surrogate import (CALIBRATED_BENCHES,
+                                              CALIBRATED_MEM_LATENCY)
 
-        if mem_latency == CALIBRATED_MEM_LATENCY:
+        if mem_latency != CALIBRATED_MEM_LATENCY:
+            _vlog(verbose,
+                  f"{pt.trace.name}: surrogate calibrated at mem_latency="
+                  f"{CALIBRATED_MEM_LATENCY}, got {mem_latency}: "
+                  "running exhaustive")
+        elif pt.trace.name not in CALIBRATED_BENCHES:
+            # uncalibrated trace family (e.g. the serving benches):
+            # exactness over speed — run the full grid
+            _vlog(verbose,
+                  f"{pt.trace.name}: trace family not in the surrogate "
+                  "calibration set: running exhaustive")
+        else:
             pruned = _run_pruned(pt, designs, unrolls, mem_latency, cache,
                                  margin, verbose)
             if check:
                 _legality_pass(pt, designs, mem_latency, pruned, verbose)
             return _attach_faults(pruned, designs, faults)
-        _vlog(verbose,
-              f"{pt.trace.name}: surrogate calibrated at mem_latency="
-              f"{CALIBRATED_MEM_LATENCY}, got {mem_latency}: "
-              "running exhaustive")
 
     tasks: list[tuple[int, DesignPoint, int]] = []
     results: list["DSEPoint | None"] = []

@@ -29,26 +29,41 @@ class BankedKVCache:
                dtype=jnp.bfloat16, plan: StreamPlan | None = None
                ) -> "BankedKVCache":
         nb = plan.n_banks if (plan and plan.use_amm) else 8
+        if nb <= 0:
+            raise ValueError(f"plan.n_banks must be positive, got {nb}")
         nb = min(nb, max_len)
+        # the kernel needs S divisible by the bank count: round down to
+        # the largest divisor of max_len <= nb (a plain halving loop
+        # collapses any non-power-of-two request, e.g. 6 banks over
+        # S=64, all the way to a single bank)
         while max_len % nb:
-            nb //= 2
+            nb -= 1
         return cls(
             k=jnp.zeros((batch, n_kv_heads, max_len, head_dim), dtype),
             v=jnp.zeros((batch, n_kv_heads, max_len, head_dim), dtype),
             length=jnp.zeros((batch,), jnp.int32),
-            n_banks=max(nb, 1),
+            n_banks=nb,
         )
 
     def append(self, k_new: jax.Array, v_new: jax.Array) -> "BankedKVCache":
         """k/v_new: [B, Hkv, 1, D] written at each row's *own* current
         length — mixed-length batches (ragged serving traffic) place
-        each row's token independently via a per-row scatter."""
+        each row's token independently via a per-row scatter.
+
+        Full-row contract: a row at capacity (``length == max_len``)
+        drops the append — its k/v stay untouched and its length stays
+        clamped at ``max_len`` (eviction/rotation is the caller's job).
+        Without ``mode="drop"`` JAX *clamps* the out-of-bounds scatter
+        index, silently overwriting the newest token in the last slot
+        while ``length`` kept growing past the cache size."""
         rows = jnp.arange(self.k.shape[0])
+        max_len = self.k.shape[2]
         k = self.k.at[rows, :, self.length].set(
-            k_new[:, :, 0].astype(self.k.dtype))
+            k_new[:, :, 0].astype(self.k.dtype), mode="drop")
         v = self.v.at[rows, :, self.length].set(
-            v_new[:, :, 0].astype(self.v.dtype))
-        return dataclasses.replace(self, k=k, v=v, length=self.length + 1)
+            v_new[:, :, 0].astype(self.v.dtype), mode="drop")
+        length = jnp.minimum(self.length + 1, max_len)
+        return dataclasses.replace(self, k=k, v=v, length=length)
 
     def decode_read(self, q: jax.Array, interpret: bool | None = None
                     ) -> jax.Array:

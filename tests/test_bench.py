@@ -138,7 +138,8 @@ def test_trace_generation_is_deterministic(name):
 
 @pytest.mark.parametrize("name",
                          ("spmv_crs", "bfs_queue", "nw", "viterbi",
-                          "radix_sort"))
+                          "radix_sort", "kv_decode", "paged_kv",
+                          "moe_route"))
 def test_trace_disk_cache_round_trip(name, tmp_path, monkeypatch):
     """get_trace's on-disk npz cache must reload the new traces exactly
     (array contents, names and word sizes)."""

@@ -1,0 +1,222 @@
+"""Serving workload family (ISSUE 10).
+
+Three layers:
+
+* **KV-cache bugfix regressions** — ``BankedKVCache.append`` must drop
+  (not silently overwrite) at capacity and clamp ``length``;
+  ``BankedKVCache.create`` must round a non-power-of-two bank plan to
+  the largest divisor of ``max_len`` (not collapse it to one bank) and
+  reject non-positive plans.
+* **serving-trace properties** — the three serving benches generate
+  deterministic (fingerprint-stable) traces whose measured spatial
+  locality lands below every dense MachSuite bench, the precondition
+  for extending the paper's Fig-5 claim to LLM-serving workloads.
+* **backend identity** — each serving bench runs through ``run_sweep``
+  on all three scheduler backends with bitwise-identical results.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bench import BENCHMARKS, SERVING, get_trace
+from repro.core.bench import kv_decode as KD
+from repro.core.bench import moe_route as MR
+from repro.core.bench import paged_kv as PK
+from repro.core.locality import trace_locality
+from repro.kernels import ref
+from repro.memory import BankedKVCache, StreamPlan
+
+
+def _plan(nb: int) -> StreamPlan:
+    return StreamPlan(stream="kv", locality=0.1, use_amm=True, n_banks=nb,
+                      n_read_ports=2, est_area_mm2=0.0)
+
+
+def _rand_kv(rng, b, h, d):
+    return (jnp.asarray(rng.standard_normal((b, h, 1, d)), jnp.float32),
+            jnp.asarray(rng.standard_normal((b, h, 1, d)), jnp.float32))
+
+
+# ----------------------------------------------------------------------
+# bugfix 1: append at capacity
+# ----------------------------------------------------------------------
+def test_append_at_capacity_drops_write_and_clamps_length():
+    """A full row's append is dropped: k/v bitwise untouched, length
+    pinned at max_len.  (The old behavior let JAX clamp the OOB scatter
+    onto the last slot — silently replacing the newest token — while
+    length grew past the cache size.)"""
+    rng = np.random.default_rng(5)
+    cache = BankedKVCache.create(2, 2, 4, 8, dtype=jnp.float32)
+    for _ in range(4):
+        cache = cache.append(*_rand_kv(rng, 2, 2, 8))
+    np.testing.assert_array_equal(np.asarray(cache.length), [4, 4])
+    k_full, v_full = cache.k, cache.v
+
+    over = cache.append(*_rand_kv(rng, 2, 2, 8))
+    np.testing.assert_array_equal(np.asarray(over.length), [4, 4])
+    assert jnp.array_equal(over.k, k_full)
+    assert jnp.array_equal(over.v, v_full)
+
+    # and decode after the over-append still matches the dense
+    # reference on the pre-overflow contents
+    q = jnp.asarray(rng.standard_normal((2, 4, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(over.decode_read(q)),
+        np.asarray(ref.kv_decode_ref(q, k_full, v_full, over.length)),
+        atol=1e-5)
+
+
+def test_append_ragged_full_row_drops_open_row_writes():
+    """Mixed-length batch with one row at capacity: the full row drops,
+    the open row still lands its token at its own length."""
+    rng = np.random.default_rng(6)
+    cache = BankedKVCache.create(2, 1, 4, 4, dtype=jnp.float32)
+    for _ in range(2):
+        cache = cache.append(*_rand_kv(rng, 2, 1, 4))
+    cache = dataclasses.replace(
+        cache, length=jnp.asarray([4, 2], jnp.int32))      # row 0 full
+
+    kn, vn = _rand_kv(rng, 2, 1, 4)
+    out = cache.append(kn, vn)
+    np.testing.assert_array_equal(np.asarray(out.length), [4, 3])
+    assert jnp.array_equal(out.k[0], cache.k[0])           # row 0 untouched
+    np.testing.assert_array_equal(np.asarray(out.k[1, :, 2]),
+                                  np.asarray(kn[1, :, 0]))
+    np.testing.assert_array_equal(np.asarray(out.v[1, :, 2]),
+                                  np.asarray(vn[1, :, 0]))
+
+
+# ----------------------------------------------------------------------
+# bugfix 2: bank-plan rounding
+# ----------------------------------------------------------------------
+def test_create_rounds_to_largest_divisor_not_single_bank():
+    """nb=6 over S=64 must give 4 banks (largest divisor <= 6); the old
+    halving loop walked 6 -> 3 -> 1 and dropped all banking."""
+    assert BankedKVCache.create(1, 1, 64, 8, plan=_plan(6)).n_banks == 4
+    assert BankedKVCache.create(1, 1, 48, 8, plan=_plan(3)).n_banks == 3
+    assert BankedKVCache.create(1, 1, 40, 8, plan=_plan(12)).n_banks == 10
+    assert BankedKVCache.create(1, 1, 32, 8, plan=_plan(8)).n_banks == 8
+    # nb > max_len clamps to max_len first
+    assert BankedKVCache.create(1, 1, 4, 8, plan=_plan(64)).n_banks == 4
+
+
+@pytest.mark.parametrize("nb", (0, -2))
+def test_create_rejects_nonpositive_bank_plan(nb):
+    with pytest.raises(ValueError, match="n_banks"):
+        BankedKVCache.create(1, 1, 32, 8, plan=_plan(nb))
+
+
+def test_create_odd_bank_plan_round_trips_decode():
+    """An odd bank count (3 banks over S=48) must survive create and
+    decode bit-for-bit against the dense masked reference."""
+    rng = np.random.default_rng(7)
+    cache = BankedKVCache.create(2, 2, 48, 8, dtype=jnp.float32,
+                                 plan=_plan(3))
+    assert cache.n_banks == 3
+    for _ in range(5):
+        cache = cache.append(*_rand_kv(rng, 2, 2, 8))
+    q = jnp.asarray(rng.standard_normal((2, 4, 8)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(cache.decode_read(q)),
+        np.asarray(ref.kv_decode_ref(q, cache.k, cache.v, cache.length)),
+        atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# serving benches: references
+# ----------------------------------------------------------------------
+def test_kv_decode_jax_matches_np():
+    i = KD.make_inputs(KD.TINY)
+    got = np.asarray(KD.run_jax(jnp.asarray(i["q"]), jnp.asarray(i["k"]),
+                                jnp.asarray(i["v"]),
+                                jnp.asarray(i["lengths"])))
+    want = KD.run_np(i["q"], i["k"], i["v"], i["lengths"])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # mixed lengths: the batch must actually be ragged
+    assert len(set(i["lengths"].tolist())) > 1
+
+
+def test_paged_kv_jax_matches_np_and_pool_is_fragmented():
+    p = PK.TINY
+    i = PK.make_inputs(p)
+    got = np.asarray(PK.run_jax(jnp.asarray(i["block_table"]),
+                                jnp.asarray(i["lengths"]),
+                                jnp.asarray(i["kv_pool"]),
+                                jnp.asarray(i["weights"]), p.page_size))
+    want = PK.run_np(i["block_table"], i["lengths"], i["kv_pool"],
+                     i["weights"], p.page_size)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # interleaved growth: some request's pages must be non-contiguous
+    bt = i["block_table"]
+    frag = any((np.diff(row[row >= 0]) != 1).any()
+               for row in bt if (row >= 0).sum() > 1)
+    assert frag, bt
+
+
+def test_moe_route_jax_matches_np_with_capacity_overflow():
+    p = MR.TINY
+    i = MR.make_inputs(p)
+    got = np.asarray(MR.run_jax(jnp.asarray(i["logits"]),
+                                jnp.asarray(i["x"]),
+                                jnp.asarray(i["w_exp"]),
+                                p.top_k, p.capacity_factor))
+    want = MR.run_np(i["logits"], i["x"], i["w_exp"],
+                     p.top_k, p.capacity_factor)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # the capacity-drop path must actually fire at TINY size
+    _, top_e = MR._route_np(i["logits"], p.top_k)
+    counts = np.bincount(top_e.reshape(-1), minlength=p.n_experts)
+    assert (counts > MR.capacity(p)).any(), counts
+
+
+# ----------------------------------------------------------------------
+# serving benches: trace properties
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", SERVING)
+def test_serving_trace_fingerprint_stable(name):
+    from repro.core.sim.prepared import trace_fingerprint
+
+    mod = BENCHMARKS[name]
+    assert trace_fingerprint(mod.gen_trace(mod.TINY)) == \
+        trace_fingerprint(mod.gen_trace(mod.TINY))
+
+
+def test_serving_locality_below_dense_benches():
+    """Fig-5 precondition: all three serving traces sit below the dense
+    byte-oriented/windowed MachSuite benches on the locality axis, and
+    the lockstep KV-decode burst lands at the very bottom (below even
+    GEMM's column walks)."""
+    L = {}
+    for name in SERVING + ("kmp", "aes", "stencil2d", "gemm_ncubed"):
+        mod = BENCHMARKS[name]
+        tr = mod.gen_trace(mod.TINY)
+        addrs, aids = tr.mem_addrs_and_arrays()
+        L[name] = trace_locality(addrs, aids)
+    for s in SERVING:
+        for dense in ("kmp", "aes", "stencil2d"):
+            assert L[s] < L[dense], (s, dense, L)
+    assert L["kv_decode"] < L["gemm_ncubed"], L
+
+
+# ----------------------------------------------------------------------
+# serving benches: 3-backend sweep identity (acceptance criterion)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("name", SERVING)
+def test_serving_sweep_identical_across_backends(name):
+    """run_sweep on py / C / jax returns bitwise-identical DSE points
+    (cycles, stall breakdowns, derived metrics) on every serving bench."""
+    from repro.core.dse.pareto import pareto_front
+    from repro.core.dse.runner import run_sweep
+    from repro.core.dse.sweep import DEFAULT_DESIGNS
+    from repro.core.sim import prepare_trace
+
+    pt = prepare_trace(get_trace(name))
+    designs = DEFAULT_DESIGNS[::4]
+    res_c = run_sweep(pt, designs, (1, 4), backend="c")
+    res_py = run_sweep(pt, designs, (1, 4), backend="py")
+    assert res_py == res_c
+    res_jax = run_sweep(pt, designs, (1, 4), backend="jax")
+    assert res_jax == res_c
+    assert pareto_front(res_c)

@@ -1,8 +1,8 @@
 #!/usr/bin/env python
 """Run the independent legality checker over the full golden matrix.
 
-For every row of ``tests/golden_schedule.json`` (12 benches x 13
-designs x unroll points = 312 rows) and every requested backend, the
+For every row of ``tests/golden_schedule.json`` (15 benches x 13
+designs x unroll points = 390 rows) and every requested backend, the
 schedule is re-run with issue-event logging and
 ``repro.core.verify.verify_result`` validates the event log against
 rules compiled straight from the AMMSpecs, plus the static hazard

@@ -2,8 +2,12 @@
 
 Deterministic, dependency-free calibration of
 ``repro.core.dse.surrogate``: a weighted least-squares init followed by
-fixed-step coordinate descent on a rank-aware loss over the 312 pinned
-golden rows (``tests/golden_schedule.json``), then closed-form
+fixed-step coordinate descent on a rank-aware loss over the calibrated
+312-row subset of the pinned golden matrix
+(``tests/golden_schedule.json`` restricted to
+``surrogate.CALIBRATED_BENCHES`` — golden rows for uncalibrated trace
+families like the LLM-serving benches are conformance pins, not fit
+data; the pruned sweep runs those exhaustively), then closed-form
 least-squares slopes for the per-kind stall models.  Writes the result
 to ``src/repro/core/dse/_surrogate_coef.py`` as checked-in constants.
 
@@ -31,7 +35,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.bench import get_trace
 from repro.core.dse.ratio import spearman_rho
-from repro.core.dse.surrogate import (CALIBRATION_DESIGNS, TraceFeatures)
+from repro.core.dse.surrogate import (CALIBRATED_BENCHES,
+                                      CALIBRATION_DESIGNS, TraceFeatures)
 from repro.core.sim import prepare_trace
 
 GOLDEN_PATH = (pathlib.Path(__file__).resolve().parents[1]
@@ -63,6 +68,8 @@ def _collect_rows():
     rows = []
     kind_of = {name: dp.kind for name, dp in CALIBRATION_DESIGNS.items()}
     for g in golden:
+        if g["bench"] not in CALIBRATED_BENCHES:
+            continue
         tf = feats_of.get(g["bench"])
         if tf is None:
             tf = TraceFeatures(prepare_trace(get_trace(g["bench"])))

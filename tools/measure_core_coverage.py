@@ -35,7 +35,8 @@ CORE_TESTS = [
     "tests/test_golden_schedule.py", "tests/test_jax_cycle.py",
     "tests/test_prepared.py", "tests/test_replay.py",
     "tests/test_runner.py", "tests/test_semantics.py",
-    "tests/test_simulator.py", "tests/test_spec_edges.py",
+    "tests/test_serving.py", "tests/test_simulator.py",
+    "tests/test_spec_edges.py",
 ]
 
 covered: dict[str, set[int]] = {}

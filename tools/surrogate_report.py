@@ -1,11 +1,13 @@
 """Surrogate-error report: analytic predictions vs the golden matrix.
 
-Emits one CSV row per pinned golden schedule row (the 12-bench x
-13-design x {1,4} calibration matrix) with the surrogate's predicted
-cycles, the pinned true cycles, the relative error, and the per-bench
-Spearman rank correlation.  CI publishes the CSV next to the Fig-4
-sweep artifacts so predictor drift is visible per commit; the hard
-accuracy gates live in ``tests/test_surrogate.py``.
+Emits one CSV row per pinned golden schedule row (the 15-bench x
+13-design x {1,4} matrix) with the surrogate's predicted cycles, the
+pinned true cycles, the relative error, and the per-bench Spearman rank
+correlation.  Rows for uncalibrated trace families (the serving
+benches, where the pruned sweep falls back to exhaustive) are flagged
+``calibrated=0`` and excluded from the summary stats.  CI publishes the
+CSV next to the Fig-4 sweep artifacts so predictor drift is visible per
+commit; the hard accuracy gates live in ``tests/test_surrogate.py``.
 
 Usage::
 
@@ -27,7 +29,9 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 from repro.core.bench import get_trace
 from repro.core.dse.ratio import spearman_rho
-from repro.core.dse.surrogate import CALIBRATION_DESIGNS, TraceFeatures, predict
+from repro.core.dse.surrogate import (CALIBRATED_BENCHES,
+                                      CALIBRATION_DESIGNS, TraceFeatures,
+                                      predict)
 from repro.core.sim import prepare_trace
 
 GOLDEN_PATH = (pathlib.Path(__file__).resolve().parents[1]
@@ -41,7 +45,7 @@ def build_report() -> "tuple[list[dict], dict]":
     for g in golden:
         by_bench[g["bench"]].append(g)
 
-    records, rel_all, rhos = [], [], {}
+    records, rhos = [], {}
     for bench in sorted(by_bench):
         pt = prepare_trace(get_trace(bench))
         feats = TraceFeatures(pt)
@@ -52,22 +56,24 @@ def build_report() -> "tuple[list[dict], dict]":
             rel = abs(p.cycles - g["cycles"]) / g["cycles"]
             preds.append(p.cycles)
             truths.append(g["cycles"])
-            rel_all.append(rel)
             records.append({
                 "bench": bench, "design": g["design"],
                 "unroll": g["unroll"], "true_cycles": g["cycles"],
                 "pred_cycles": p.cycles, "rel_err": rel,
+                "calibrated": int(bench in CALIBRATED_BENCHES),
             })
         rhos[bench] = spearman_rho(truths, preds)
 
     for r in records:
         r["bench_rho"] = rhos[r["bench"]]
-    rel_all.sort()
-    finite = [r for r in rhos.values() if r == r]
+    rel_cal = sorted(r["rel_err"] for r in records if r["calibrated"])
+    finite = [r for b, r in rhos.items()
+              if r == r and b in CALIBRATED_BENCHES]
     stats = {
         "rows": len(records),
-        "median_rel_err": rel_all[len(rel_all) // 2],
-        "max_rel_err": rel_all[-1],
+        "calibrated_rows": len(rel_cal),
+        "median_rel_err": rel_cal[len(rel_cal) // 2],
+        "max_rel_err": rel_cal[-1],
         "min_bench_rho": min(finite),
     }
     return records, stats
@@ -83,13 +89,14 @@ def main(argv: "list[str] | None" = None) -> None:
 
     records, stats = build_report()
     cols = ("bench", "design", "unroll", "true_cycles", "pred_cycles",
-            "rel_err", "bench_rho")
+            "rel_err", "bench_rho", "calibrated")
     lines = [",".join(cols)]
     for r in records:
         lines.append(",".join(
             f"{r[c]:.6g}" if isinstance(r[c], float) else str(r[c])
             for c in cols))
     lines.append(f"# rows={stats['rows']} "
+                 f"calibrated_rows={stats['calibrated_rows']} "
                  f"median_rel_err={stats['median_rel_err']:.4f} "
                  f"max_rel_err={stats['max_rel_err']:.4f} "
                  f"min_bench_rho={stats['min_bench_rho']:.4f}")
